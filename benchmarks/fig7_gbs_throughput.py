@@ -1,0 +1,19 @@
+"""Fig. 7 / Obs. III.2: throughput vs global batch size (22B and 1T)."""
+from benchmarks._util import emit
+from repro.core import costmodel as cm
+
+
+def run() -> None:
+    for name, model, tp, pp, gpus in (("22b", cm.GPT_22B, 2, 4, 64),
+                                      ("1t", cm.GPT_1T, 8, 64, 1024)):
+        dp = gpus // (tp * pp)
+        prev = 0.0
+        mono = True
+        for gas in (1, 2, 4, 8, 16, 32, 64):
+            cfg = cm.ParallelCfg(tp=tp, pp=pp, mbs=2, gas=gas, dp=dp)
+            p = cm.predict(model, cfg)
+            emit(f"fig7.{name}.gbs{cfg.gbs}", p.step_time_s * 1e6,
+                 f"{p.tflops_per_gpu:.1f}TF_bubble{p.bubble:.3f}")
+            mono &= p.tflops_per_gpu >= prev - 1e-9
+            prev = p.tflops_per_gpu
+        emit(f"fig7.{name}.obs_III_2", None, f"throughput_increases_with_gbs={mono}")

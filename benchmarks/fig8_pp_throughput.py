@@ -1,0 +1,28 @@
+"""Fig. 8 / Obs. III.3+III.4: pipeline stages vs throughput,
+(a) fixed GBS=128 -> degrades; (b) GBS scaled with PP -> flat."""
+from benchmarks._util import emit
+from repro.core import costmodel as cm
+
+
+def run() -> None:
+    model = cm.GPT_22B
+    tp = 8
+    vals_fixed, vals_scaled = [], []
+    for pp in (2, 4, 8, 16):
+        m_fixed = max(1, 128 // (2 * 1))       # gbs 128 = mbs2 * gas * dp1
+        cfg_f = cm.ParallelCfg(tp=tp, pp=pp, mbs=2, gas=m_fixed, dp=1)
+        p_f = cm.predict(model, cfg_f)
+        vals_fixed.append(p_f.tflops_per_gpu)
+        emit(f"fig8a.pp{pp}.gbs{cfg_f.gbs}", p_f.step_time_s * 1e6,
+             f"{p_f.tflops_per_gpu:.1f}TF_bubble{p_f.bubble:.3f}")
+        # scaled: keep pp/m fixed (bubble ratio constant)
+        gas_s = m_fixed * pp // 2
+        cfg_s = cm.ParallelCfg(tp=tp, pp=pp, mbs=2, gas=gas_s, dp=1)
+        p_s = cm.predict(model, cfg_s)
+        vals_scaled.append(p_s.tflops_per_gpu)
+        emit(f"fig8b.pp{pp}.gbs{cfg_s.gbs}", p_s.step_time_s * 1e6,
+             f"{p_s.tflops_per_gpu:.1f}TF_bubble{p_s.bubble:.3f}")
+    drop_fixed = (vals_fixed[0] - vals_fixed[-1]) / vals_fixed[0]
+    drop_scaled = abs(vals_scaled[0] - vals_scaled[-1]) / vals_scaled[0]
+    emit("fig8.obs_III_3", None, f"fixed_gbs_degrades_{drop_fixed:.1%}")
+    emit("fig8.obs_III_4", None, f"scaled_gbs_flat_{drop_scaled:.1%}")

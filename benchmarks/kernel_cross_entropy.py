@@ -1,0 +1,40 @@
+"""Kernel benchmark: blocked CE (logits stay in VMEM) vs materialized CE.
+
+The measured comparison is the XLA chunked-CE formulation (same algorithm)
+vs the naive full-logits path; the Pallas kernel is checked in interpret
+mode. Derived column: peak logits-memory ratio."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks._util import emit, time_fn
+from repro.kernels import ops
+from repro.kernels.ref import cross_entropy_ref
+
+
+def run() -> None:
+    N, d, V = 8192, 512, 32000
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    h = jax.random.normal(ks[0], (N, d), jnp.float32)
+    w = jax.random.normal(ks[1], (d, V), jnp.float32) * 0.05
+    y = jax.random.randint(ks[2], (N,), 0, V)
+
+    naive = jax.jit(lambda h, w, y: cross_entropy_ref(h, w, y))
+
+    def chunked(h, w, y, chunk=1024):
+        def body(c, xs):
+            hc, yc = xs
+            logits = hc @ w
+            lse = jax.nn.logsumexp(logits, -1)
+            ll = jnp.take_along_axis(logits, yc[:, None], -1)[:, 0]
+            return c + jnp.sum(lse - ll), None
+        s, _ = jax.lax.scan(body, 0.0, (h.reshape(-1, chunk, d), y.reshape(-1, chunk)))
+        return s / y.shape[0]
+
+    jc = jax.jit(chunked)
+    t_naive = time_fn(naive, h, w, y)
+    t_chunk = time_fn(jc, h, w, y)
+    emit("kernel.ce.naive_full_logits", t_naive, f"peak_logits_{N}x{V}")
+    emit("kernel.ce.chunked_online", t_chunk, f"peak_logits_1024x{V}_memx{N//1024}_lower")
+    err = abs(float(ops.cross_entropy(h[:256], w[:, :4096], jnp.clip(y[:256], 0, 4095)))
+              - float(cross_entropy_ref(h[:256], w[:, :4096], jnp.clip(y[:256], 0, 4095))))
+    emit("kernel.ce.pallas_interpret_err", None, f"{err:.2e}")

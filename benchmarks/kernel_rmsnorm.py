@@ -1,0 +1,20 @@
+"""Kernel benchmark: fused RMSNorm (jnp-fused path timed; Pallas interpret
+correctness)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks._util import emit, time_fn
+from repro.models import layers
+from repro.kernels import ops
+from repro.kernels.ref import rmsnorm_ref
+
+
+def run() -> None:
+    x = jax.random.normal(jax.random.PRNGKey(0), (8192, 2048), jnp.float32)
+    w = jnp.ones(2048)
+    fused = jax.jit(lambda x, w: layers.rms_norm(x, w))
+    t = time_fn(fused, x, w)
+    gbps = (x.size * 4 * 2) / (t / 1e6) / 1e9
+    emit("kernel.rmsnorm.xla_fused", t, f"{gbps:.1f}GBps_effective")
+    err = float(jnp.abs(ops.rmsnorm(x[:256], w) - rmsnorm_ref(x[:256], w)).max())
+    emit("kernel.rmsnorm.pallas_interpret_maxerr", None, f"{err:.2e}")

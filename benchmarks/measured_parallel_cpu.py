@@ -1,0 +1,61 @@
+"""Real measured companion (CPU scale): the actual training step under
+TP / DP / ZeRO-1 / pipeline configs on 8 virtual devices — demonstrates the
+full code path end-to-end with wall-clock numbers (interconnect trends are
+not meaningful on host CPU; the structural trends live in the cost model)."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CODE = '''
+import time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.optim import AdamWConfig
+from repro.runtime.train_loop import TrainPlan, init_train_state, jit_train_step
+from repro.launch.mesh import make_mesh_2d
+from repro.data import SyntheticCorpus, make_batch_iterator
+
+cfg = get_config("yi-6b").reduced(n_layers=2, d_model=256, n_heads=4,
+                                  n_kv_heads=2, d_ff=512, vocab_size=512, head_dim=64)
+model = Model(cfg, jnp.float32)
+opt = AdamWConfig(lr=1e-3)
+it = make_batch_iterator(SyntheticCorpus(vocab_size=cfg.vocab_size),
+                         seq_len=128, global_batch=16, prefetch=0)
+batch = next(it)
+for label, (dp, tp), plan in [
+    ("dp8", (8, 1), TrainPlan(rules="dp_only", zero1=False)),
+    ("dp8_zero1", (8, 1), TrainPlan(zero1=True)),
+    ("tp8", (1, 8), TrainPlan(rules="tp_only", zero1=False)),
+    ("dp2_tp4", (2, 4), TrainPlan(zero1=True)),
+    ("fsdp8", (8, 1), TrainPlan(rules="fsdp", zero1=True)),
+]:
+    mesh = make_mesh_2d(dp, tp)
+    state = init_train_state(model, jax.random.PRNGKey(0), opt, plan)
+    step = jit_train_step(model, opt, plan, mesh, 16, 128)
+    state, _ = step(state, batch)  # compile+warm
+    ts = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+        ts.append(time.perf_counter() - t0)
+    print(f"measured.train_step.{label},{np.median(ts)*1e6:.1f},loss{float(m['loss']):.3f}")
+'''
+
+
+def run() -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", CODE], env=env,
+                       capture_output=True, text=True, timeout=900)
+    if r.returncode != 0:
+        print(f"measured.train_step.ERROR,,{r.stderr.strip()[-200:]}")
+        return
+    for line in r.stdout.strip().splitlines():
+        if line.startswith("measured."):
+            print(line)

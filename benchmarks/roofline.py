@@ -1,0 +1,27 @@
+"""Roofline table from the dry-run results (EXPERIMENTS.md §Roofline)."""
+import json
+import os
+
+from benchmarks._util import emit
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "results", "dryrun_single.json")
+
+
+def run() -> None:
+    if not os.path.exists(RESULTS):
+        emit("roofline.missing", None, "run_repro.launch.dryrun_first")
+        return
+    with open(RESULTS) as f:
+        recs = [json.loads(l) for l in f if l.strip()]
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skipped" for r in recs)
+    emit("roofline.combos", None, f"{n_ok}ok_{n_skip}skipped_of_{len(recs)}")
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        emit(f"roofline.{r['arch']}.{r['shape']}",
+             t["compute_s"] * 1e6,
+             f"dom={t['dominant']}_mem{t['memory_s']*1e3:.1f}ms_"
+             f"coll{t['collective_s']*1e3:.1f}ms_useful{(r['useful_flops_ratio'] or 0):.2f}")

@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure (+ kernels, roofline,
+measured CPU companions).  Prints ``name,us_per_call,derived`` CSV."""
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.table1_model_sizes",
+    "benchmarks.fig6_tp_throughput",
+    "benchmarks.fig7_gbs_throughput",
+    "benchmarks.fig8_pp_throughput",
+    "benchmarks.fig9_hpo_search",
+    "benchmarks.fig10_sensitivity",
+    "benchmarks.table5_fig11_recipes",
+    "benchmarks.fig12_weak_scaling",
+    "benchmarks.fig13_strong_scaling",
+    "benchmarks.kernel_flash_attention",
+    "benchmarks.kernel_rmsnorm",
+    "benchmarks.kernel_cross_entropy",
+    "benchmarks.roofline",
+    "benchmarks.measured_parallel_cpu",
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        if only and only not in mod_name:
+            continue
+        try:
+            importlib.import_module(mod_name).run()
+        except Exception as e:
+            failures += 1
+            print(f"{mod_name}.ERROR,,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

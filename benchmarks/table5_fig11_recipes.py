@@ -1,0 +1,28 @@
+"""Table V + Fig. 11: the training recipes and their achieved throughput.
+
+Paper: 22B -> 38.38% (73.5 TF), 175B -> 36.14% (69.2 TF), 1T -> 31.96%
+(61.2 TF) of the 191.5 TF MI250X-GCD peak."""
+from benchmarks._util import emit
+from repro.core import costmodel as cm
+
+PAPER = {"22B": 38.38, "175B": 36.14, "1T": 31.96}
+RECIPES = {"22B": cm.RECIPE_22B, "175B": cm.RECIPE_175B, "1T": cm.RECIPE_1T}
+
+
+def run() -> None:
+    for name, paper_pct in PAPER.items():
+        p = cm.predict(cm.MODELS[name], RECIPES[name], cm.FRONTIER)
+        err = abs(p.pct_peak - paper_pct)
+        emit(f"table5.{name}", p.step_time_s * 1e6,
+             f"{p.pct_peak:.2f}pct_vs_paper_{paper_pct}pct_abs_err{err:.2f}")
+        emit(f"fig11.{name}.tflops", None,
+             f"{p.tflops_per_gpu:.1f}TF_paper_{paper_pct*1.915:.1f}TF")
+    # flash attention contribution (paper: ~30% throughput improvement)
+    import dataclasses
+    cfg = RECIPES["22B"]
+    with_fa = cm.predict(cm.GPT_22B, cfg, cm.FRONTIER).tflops_per_gpu
+    without = cm.predict(cm.GPT_22B,
+                         dataclasses.replace(cfg, flash_attention=False),
+                         cm.FRONTIER).tflops_per_gpu
+    emit("table5.flash_attention_gain", None,
+         f"{(with_fa/without-1):.1%}_paper_~30pct")

@@ -1,0 +1,63 @@
+#!/usr/bin/env python
+"""Pipeline parallelism, for real: trains a layer-stack across 4 virtual
+devices with 1F1B-style microbatch rotation and shows the measured bubble
+against the analytic model (paper Obs. III.2/III.3).
+
+Re-execs itself with 4 virtual CPU devices if needed.
+
+    PYTHONPATH=src python examples/pipeline_demo.py
+"""
+import os
+import sys
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=4")
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pipeline as pp
+from repro.core.bubble import bubble_fraction
+from repro.launch.mesh import make_pipeline_mesh
+
+
+def main():
+    L, B, S, d = 8, 32, 64, 256
+    p_stages = 4
+    w = 0.1 * jax.random.normal(jax.random.PRNGKey(0), (L, d, d))
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d))
+    mesh = make_pipeline_mesh(p_stages, 1)
+
+    def layer_fn(lp, h):
+        return jnp.tanh(h @ lp)
+
+    pipelined = pp.pipeline_apply(pp.layer_stage_fn(layer_fn), mesh)
+
+    print(f"{L} layers over {p_stages} pipeline stages; varying microbatches m:")
+    times = {}
+    for m in (1, 2, 4, 8, 16, 32):
+        def loss(w):
+            stages = pp.stack_stages(w, p_stages)
+            micro = x.reshape(m, B // m, S, d)
+            return jnp.mean(pipelined(stages, micro) ** 2)
+
+        with mesh:
+            g = jax.jit(jax.grad(loss))
+            g(w)  # compile
+            t0 = time.time()
+            for _ in range(5):
+                jax.block_until_ready(g(w))
+            dt = (time.time() - t0) / 5
+        times[m] = dt
+        bub = bubble_fraction(p_stages, m)
+        print(f"  m={m:3d}: {dt*1e3:7.1f} ms/step   analytic bubble {bub:.1%}")
+    print("Obs III.2: more microbatches saturate the pipeline "
+          f"(measured m=1 vs m=32: {times[1]/times[32]:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

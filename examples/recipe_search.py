@@ -1,0 +1,46 @@
+#!/usr/bin/env python
+"""The paper's §IV, end to end: hyperparameter-search a distributed-training
+recipe for the 175B model on a Frontier-like machine, then explain it.
+
+    PYTHONPATH=src python examples/recipe_search.py
+"""
+from repro.core import costmodel as cm
+from repro.core.hpo import SPACE_175B, bayesian_search
+from repro.core.sensitivity import shapley_importance
+
+
+def objective(cfg):
+    n_gpus = cfg["nnodes"] * 8
+    if n_gpus % (cfg["tp"] * cfg["pp"]) != 0:
+        return -1.0
+    dp = n_gpus // (cfg["tp"] * cfg["pp"])
+    pc = cm.ParallelCfg(tp=cfg["tp"], pp=cfg["pp"], mbs=cfg["mbs"],
+                        gas=cfg["gas"], dp=dp, zero1=bool(cfg["zero1"]))
+    return cm.predict(cm.GPT_175B, pc, cm.FRONTIER).objective
+
+
+def main():
+    print("searching 128 configurations (async BO, OOM-penalized)...")
+    res = bayesian_search(objective, n_trials=128, seed=0)
+    fr = res.failure_rate()
+    print(f"  OOM-failure rate: {fr[15]:.0%} (first 16) -> {fr[-1]:.0%} (last 16)")
+    best = res.best
+    print(f"  best recipe: {best.config} -> {best.objective:.1f} TFLOPS/GPU "
+          f"(paper's search reached ~22 TFLOPS in the same memory-starved "
+          f"16-node regime)")
+    imp = shapley_importance(res, SPACE_175B)
+    print("  hyperparameter importance (Shapley):")
+    for k, v in sorted(imp.items(), key=lambda kv: -kv[1]):
+        print(f"    {k:8s} {v:6.3f}")
+    print("  (paper Fig. 10: mbs > tp > pp > nnodes > zero1 — zero1 least)")
+
+    # Table V recipes through the same model
+    for name, cfg in (("175B", cm.RECIPE_175B), ("1T", cm.RECIPE_1T)):
+        p = cm.predict(cm.MODELS[name], cfg, cm.FRONTIER)
+        print(f"  Table V {name}: TP={cfg.tp} PP={cfg.pp} GBS={cfg.gbs} -> "
+              f"{p.pct_peak:.1f}% of peak (paper: "
+              f"{'36.14' if name == '175B' else '31.96'}%)")
+
+
+if __name__ == "__main__":
+    main()

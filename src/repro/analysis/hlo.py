@@ -1,0 +1,64 @@
+"""HLO text analysis: collective-communication byte accounting.
+
+``compiled.cost_analysis()`` gives FLOPs and memory traffic but not
+collective bytes, so we parse the (optimized) HLO module text and sum the
+operand sizes of every collective op, bucketed by opcode.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# an HLO instruction line:  %name = <shape(s)> opcode(<operands>)
+_INSTR_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+([a-z0-9-]+)(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum of operand bytes per collective opcode over the HLO module text."""
+    out: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        base = None
+        for c in COLLECTIVES:
+            if op == c or op.startswith(c):
+                base = c
+                break
+        if base is None:
+            continue
+        # operand shapes are inside the call parens; take text after opcode
+        call = line[m.end():]
+        total = sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(call))
+        out[base] += total
+    return dict(out)
+
+
+def count_ops(hlo_text: str, opcode: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opcode)}(?:-start)?\(", hlo_text))
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return sum(collective_bytes(hlo_text).values())

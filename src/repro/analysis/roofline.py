@@ -1,0 +1,141 @@
+"""Roofline-term computation from dry-run compiled artifacts.
+
+Per the brief, for TPU v5e:
+    compute term    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+    memory term     = HLO_bytes / (chips x 819 GB/s HBM)
+    collective term = collective_bytes / (chips x 50 GB/s link)
+
+``cost_analysis()`` on a GSPMD-compiled module reports the *per-device*
+program, so FLOPs/bytes from it are already per-chip; we keep both
+conventions explicit below.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.models.common import ModelConfig, is_spec
+from repro.models.model import Model
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu_v5e"
+    peak_flops: float = 197e12        # bf16 per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    link_bw: float = 50e9             # bytes/s per ICI link
+    hbm_bytes: float = 16e9
+
+
+V5E = Hardware()
+
+# The paper's machine, for the cost-model reproduction benchmarks.
+FRONTIER_MI250X = Hardware(
+    name="mi250x_gcd", peak_flops=191.5e12, hbm_bw=1638e9 / 2, link_bw=50e9,
+    hbm_bytes=64e9,
+)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound (sum) — we also report max() as the
+        perfectly-overlapped bound."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "chips": self.chips,
+        }
+
+
+def roofline_terms(
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes_per_device: float,
+    chips: int,
+    hw: Hardware = V5E,
+) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops_per_device / hw.peak_flops,
+        memory_s=bytes_per_device / hw.hbm_bw,
+        collective_s=collective_bytes_per_device / hw.link_bw,
+        flops_per_device=flops_per_device,
+        bytes_per_device=bytes_per_device,
+        collective_bytes_per_device=collective_bytes_per_device,
+        chips=chips,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS: 6 N D (dense) / 6 N_active D (MoE); forward-only = 2 N D.
+# ---------------------------------------------------------------------------
+
+def param_counts(cfg: ModelConfig) -> dict[str, int]:
+    """Total and active (per-token) parameter counts from the spec tree."""
+    model = Model(cfg)
+    specs = model.param_specs()
+    flat, _ = jax.tree_util.tree_flatten_with_path(specs, is_leaf=is_spec)
+    total = 0
+    active = 0
+    for path, spec in flat:
+        n = int(np.prod(spec.shape))
+        total += n
+        keys = [str(getattr(p, "key", p)) for p in path]
+        is_expert = "experts" in spec.axes
+        is_embed = keys[-1] in ("embed", "lm_head") or keys[0] in ("embed", "lm_head")
+        if is_expert:
+            active += n * max(cfg.top_k, 1) // max(cfg.n_experts, 1)
+        elif is_embed:
+            # embedding lookup / logits matmul touch all vocab rows only at
+            # the logits end; count the standard convention (logits included,
+            # gather excluded): lm_head yes, embed-as-lookup no.
+            active += n if not cfg.tie_embeddings else n
+        else:
+            active += n
+    return {"total": total, "active": active}
+
+
+def model_flops(cfg: ModelConfig, *, tokens: int, kind: str) -> float:
+    counts = param_counts(cfg)
+    n = counts["active"]
+    if kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens  # prefill / decode forward-only
+
+
+def useful_flops_ratio(cfg: ModelConfig, *, tokens: int, kind: str,
+                       flops_per_device: float, chips: int) -> float:
+    hlo_total = flops_per_device * chips
+    if hlo_total <= 0:
+        return float("nan")
+    return model_flops(cfg, tokens=tokens, kind=kind) / hlo_total

@@ -1,0 +1,155 @@
+"""DeepHyper-style asynchronous Bayesian hyperparameter search (paper §IV).
+
+Reproduces the paper's tuning of a 175B model over
+  PP in {1,2,4,8,12,16}, TP in {1,2,4,8}, MBS in [4,20], GAS in {5,10},
+  ZeRO-1 in {0,1}, NNODES in {12,16}
+maximizing achieved FLOPS, with OOM failures penalized via the paper's
+"F-objective" (failed configs get a value below every success, so the
+surrogate learns to avoid them — the red-arrow frequency in Fig. 9 decays).
+
+numpy-only Bayesian optimization: an RBF-kernel ridge surrogate (a GP
+posterior-mean stand-in) + expected-improvement-flavoured acquisition over
+random candidate draws, mirroring DeepHyper's centralized async search.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    name: str
+    values: tuple          # discrete choices (paper's space is all discrete)
+
+
+SPACE_175B = (
+    Param("pp", (1, 2, 4, 8, 12, 16)),
+    Param("tp", (1, 2, 4, 8)),
+    Param("mbs", tuple(range(4, 21))),
+    Param("gas", (5, 10)),
+    Param("zero1", (0, 1)),
+    Param("nnodes", (12, 16)),
+)
+
+
+@dataclasses.dataclass
+class Trial:
+    config: dict
+    objective: float       # achieved TFLOPS/GPU; failures -> penalized
+    failed: bool
+
+
+@dataclasses.dataclass
+class SearchResult:
+    trials: list[Trial]
+
+    @property
+    def best(self) -> Trial:
+        ok = [t for t in self.trials if not t.failed]
+        return max(ok, key=lambda t: t.objective) if ok else self.trials[0]
+
+    def best_so_far(self) -> list[float]:
+        out, cur = [], -np.inf
+        for t in self.trials:
+            if not t.failed:
+                cur = max(cur, t.objective)
+            out.append(cur)
+        return out
+
+    def failure_rate(self, window: int = 16) -> list[float]:
+        fails = [float(t.failed) for t in self.trials]
+        return [float(np.mean(fails[max(0, i - window):i + 1]))
+                for i in range(len(fails))]
+
+
+def _encode(space: Sequence[Param], config: dict) -> np.ndarray:
+    x = []
+    for p in space:
+        vals = np.asarray(p.values, dtype=float)
+        v = float(config[p.name])
+        x.append((v - vals.min()) / max(vals.max() - vals.min(), 1e-9))
+    return np.asarray(x)
+
+
+def _sample(space: Sequence[Param], rng: np.random.Generator) -> dict:
+    return {p.name: p.values[rng.integers(len(p.values))] for p in space}
+
+
+class RBFSurrogate:
+    """Kernel ridge regression with an RBF kernel — the GP posterior mean."""
+
+    def __init__(self, lengthscale: float = 0.35, reg: float = 1e-3):
+        self.ls = lengthscale
+        self.reg = reg
+        self.X: np.ndarray | None = None
+        self.alpha: np.ndarray | None = None
+        self.y_mean = 0.0
+        self.y_std = 1.0
+
+    def _k(self, A: np.ndarray, B: np.ndarray) -> np.ndarray:
+        d2 = ((A[:, None, :] - B[None, :, :]) ** 2).sum(-1)
+        return np.exp(-d2 / (2 * self.ls ** 2))
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> None:
+        self.y_mean, self.y_std = float(y.mean()), float(y.std() + 1e-9)
+        yn = (y - self.y_mean) / self.y_std
+        K = self._k(X, X) + self.reg * np.eye(len(X))
+        self.alpha = np.linalg.solve(K, yn)
+        self.X = X
+
+    def predict(self, X: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        K = self._k(X, self.X)
+        mu = K @ self.alpha * self.y_std + self.y_mean
+        # distance-based uncertainty proxy (max kernel similarity)
+        sigma = self.y_std * np.sqrt(np.clip(1.0 - K.max(axis=1), 1e-6, 1.0))
+        return mu, sigma
+
+
+def bayesian_search(
+    objective: Callable[[dict], float],
+    space: Sequence[Param] = SPACE_175B,
+    *,
+    n_trials: int = 128,
+    n_random: int = 16,
+    n_candidates: int = 256,
+    seed: int = 0,
+    fail_value: float | None = None,
+) -> SearchResult:
+    """objective returns TFLOPS/GPU, or a negative value for failure (OOM)."""
+    rng = np.random.default_rng(seed)
+    trials: list[Trial] = []
+    seen: set[tuple] = set()
+
+    def evaluate(cfg: dict) -> None:
+        val = objective(cfg)
+        failed = val < 0
+        trials.append(Trial(cfg, val, failed))
+
+    while len(trials) < n_trials:
+        if len(trials) < n_random:
+            cfg = _sample(space, rng)
+        else:
+            X = np.stack([_encode(space, t.config) for t in trials])
+            ok_vals = [t.objective for t in trials if not t.failed]
+            floor = (min(ok_vals) - 1.0) if ok_vals else 0.0
+            y = np.asarray([t.objective if not t.failed
+                            else (fail_value if fail_value is not None else floor)
+                            for t in trials])
+            surr = RBFSurrogate()
+            surr.fit(X, y)
+            cands = [_sample(space, rng) for _ in range(n_candidates)]
+            Xc = np.stack([_encode(space, c) for c in cands])
+            mu, sigma = surr.predict(Xc)
+            best = y.max()
+            ei = (mu - best) + 1.2 * sigma       # UCB-flavoured EI
+            cfg = cands[int(np.argmax(ei))]
+        key = tuple(cfg.values())
+        if key in seen and rng.random() < 0.8:
+            cfg = _sample(space, rng)
+            key = tuple(cfg.values())
+        seen.add(key)
+        evaluate(cfg)
+    return SearchResult(trials)

@@ -1,0 +1,205 @@
+"""Pipeline parallelism: circular microbatch pipeline over a "pipe" mesh axis.
+
+The paper's second parallel dimension (§II.C): the model's layers are split
+into p stages, each stage pinned to one device group; microbatches flow
+through the ring via ``lax.ppermute``.  JAX-native equivalent of
+GPipe/PipeDream scheduling:
+
+  * forward: stage s processes microbatch j at tick t = j + s,
+  * total ticks T = m + p - 1, so the idle (bubble) fraction per device is
+    (p-1)/(m+p-1) ~= (p-1)/m — exactly the paper's bubble formula,
+  * backward runs through ``jax.grad`` of the whole pipelined computation
+    (an all-forward-then-all-backward GPipe schedule; 1F1B's memory benefit
+    is modeled analytically in ``core/bubble.py`` — DESIGN.md §2).
+
+``stage_fn(stage_params, x) -> x`` is applied once per device per tick;
+stage parameters live sharded over the pipe axis (leading ``stage`` dim).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def pipeline_apply(
+    stage_fn: Callable[[Any, jax.Array], jax.Array],
+    mesh: Mesh,
+    *,
+    pipe_axis: str = "pipe",
+) -> Callable[[Any, jax.Array], jax.Array]:
+    """Returns pipelined(stacked_stage_params, microbatches).
+
+    ``stacked_stage_params``: pytree, leading dim = n_stages (= pipe axis
+    size), sharded over ``pipe_axis``.
+    ``microbatches``: (m, mbs, ...) — replicated over the pipe axis.
+    Returns (m, mbs, ...) outputs after all stages (replicated).
+    """
+    p = mesh.shape[pipe_axis]
+    perm = [(i, (i + 1) % p) for i in range(p)]
+
+    def inner(params_local, micro):
+        params_local = jax.tree.map(lambda a: a[0], params_local)
+        idx = jax.lax.axis_index(pipe_axis)
+        is_first = idx == 0
+        is_last = idx == p - 1
+        m = micro.shape[0]
+        T = m + p - 1
+        zero = jnp.zeros_like(micro[0])
+
+        def tick(recv, t):
+            mb = jnp.clip(t, 0, m - 1)
+            x0 = jax.lax.dynamic_index_in_dim(micro, mb, 0, keepdims=False)
+            inp = jnp.where(is_first, x0, recv)
+            out = stage_fn(params_local, inp)
+            nxt = jax.lax.ppermute(out, pipe_axis, perm)
+            return nxt, out
+
+        _, ys = jax.lax.scan(tick, zero, jnp.arange(T))
+        outs = jax.lax.dynamic_slice_in_dim(ys, p - 1, m, axis=0)
+        outs = jnp.where(is_last, outs, 0)
+        return jax.lax.psum(outs, pipe_axis)
+
+    return shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(pipe_axis), P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+
+
+def pipeline_apply_interleaved(
+    stage_fn: Callable[[Any, jax.Array], jax.Array],
+    mesh: Mesh,
+    *,
+    v: int,
+    pipe_axis: str = "pipe",
+) -> Callable[[Any, jax.Array], jax.Array]:
+    """Interleaved virtual stages: device d hosts logical stages
+    {d, d+p, ..., d+(v-1)p}; activations loop the ring v times.
+
+    Microbatches are injected in waves of (at most) p, each wave taking
+    v*p + w - 1 ticks — the circular analogue of Megatron's interleaved
+    1F1B whose bubble is (p-1)/(v*m + p - 1) (see core/bubble.py; matches
+    the measured tick counts in tests/test_pipeline_interleaved.py).
+
+    ``stacked_stage_params``: leading dims (v*p, layers_per_stage, ...); the
+    v*p logical stages are distributed so slot k of device d is logical
+    stage k*p + d.
+    """
+    p = mesh.shape[pipe_axis]
+    perm = [(i, (i + 1) % p) for i in range(p)]
+
+    def inner(params_local, micro):
+        # params_local: (v, layers_per_stage, ...) — this device's slots
+        params_local = jax.tree.map(lambda a: a[0], params_local)
+        idx = jax.lax.axis_index(pipe_axis)
+        is_first = idx == 0
+        is_last = idx == p - 1
+        m = micro.shape[0]
+        waves = -(-m // p)
+        zero = jnp.zeros_like(micro[0])
+        S = v * p
+
+        def run_wave(w_start, w_size_ticks):
+            def tick(recv, t):
+                # device d serves the item at logical stage s = t - d (ring),
+                # using local slot s // p
+                s = t - idx
+                slot = jnp.clip(jnp.floor_divide(s, p), 0, v - 1)
+                mb = jnp.clip(w_start + t, w_start, m - 1)
+                x0 = jax.lax.dynamic_index_in_dim(micro, mb, 0, keepdims=False)
+                inp = jnp.where((slot == 0) & is_first & (t < p), x0, recv)
+                lp = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, slot, 0, keepdims=False),
+                    params_local)
+                out = stage_fn(lp, inp)
+                nxt = jax.lax.ppermute(out, pipe_axis, perm)
+                return nxt, out
+
+            T = S + p - 1
+            _, ys = jax.lax.scan(tick, zero, jnp.arange(T))
+            outs = jax.lax.dynamic_slice_in_dim(ys, S - 1, p, axis=0)
+            outs = jnp.where(is_last, outs, 0)
+            return jax.lax.psum(outs.astype(jnp.float32), pipe_axis).astype(outs.dtype)
+
+        wave_outs = []
+        for w in range(waves):
+            w_size = min(p, m - w * p)
+            wave_outs.append(run_wave(w * p, w_size)[:w_size])
+        return jnp.concatenate(wave_outs, axis=0)
+
+    def reshape_params(stacked, micro):
+        # (v*p, lps, ...) -> per-device (v, lps, ...): slot k = stage k*p + d
+        def re(a):
+            vp = a.shape[0]
+            assert vp == v * p, (vp, v, p)
+            return a.reshape(v, p, *a.shape[1:]).swapaxes(0, 1)
+        return jax.tree.map(re, stacked)
+
+    smapped = shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(pipe_axis), P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+
+    def apply(stacked_stage_params, micro):
+        return smapped(reshape_params(stacked_stage_params, micro), micro)
+
+    return apply
+
+
+def stack_stages(stacked_layers: Any, n_stages: int) -> Any:
+    """(L, ...) layer-stacked params -> (n_stages, L/p, ...)."""
+    def reshape(a):
+        L = a.shape[0]
+        assert L % n_stages == 0, (L, n_stages)
+        return a.reshape(n_stages, L // n_stages, *a.shape[1:])
+    return jax.tree.map(reshape, stacked_layers)
+
+
+def layer_stage_fn(layer_fn: Callable[[Any, jax.Array], jax.Array]):
+    """stage_fn that scans ``layer_fn`` over the stage's layer slice."""
+    def stage(stage_params, x):
+        def body(c, lp):
+            return layer_fn(lp, c), None
+        y, _ = jax.lax.scan(body, x, stage_params)
+        return y
+    return stage
+
+
+def pipeline_loss_fn(
+    layer_fn: Callable[[Any, jax.Array], jax.Array],
+    embed_fn: Callable[[Any, jax.Array], jax.Array],
+    head_fn: Callable[[Any, jax.Array, jax.Array], jax.Array],
+    mesh: Mesh,
+    *,
+    n_stages: int,
+    n_micro: int,
+    pipe_axis: str = "pipe",
+):
+    """End-to-end pipelined LM loss:
+
+      loss(params, batch) where params = {"embed_side": ..., "layers": (L,...)}
+      batch = {"tokens": (B, S)}; B is split into ``n_micro`` microbatches.
+    """
+    pipelined = pipeline_apply(layer_stage_fn(layer_fn), mesh, pipe_axis=pipe_axis)
+
+    def loss(params, batch):
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        assert B % n_micro == 0, (B, n_micro)
+        mbs = B // n_micro
+        x = embed_fn(params, tokens)                      # (B, S, d)
+        micro = x.reshape(n_micro, mbs, *x.shape[1:])
+        stages = stack_stages(params["layers"], n_stages)
+        y = pipelined(stages, micro)                      # (m, mbs, S, d)
+        y = y.reshape(B, *x.shape[1:])
+        return head_fn(params, y, tokens)
+
+    return loss

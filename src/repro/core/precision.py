@@ -1,0 +1,106 @@
+"""Mixed-precision policy + loss scaling (the paper's APEX-equivalent layer).
+
+The paper trains in fp16 with fp32 master weights and Adam moments (6 bytes
+parameter + 4 gradient + 4 optimizer per parameter, Table II).  On TPU the
+native fast dtype is bf16 (no loss scaling needed); we support both, with
+dynamic loss scaling for fp16 exactly like APEX/DeepSpeed:
+
+  * scale starts at ``init_scale``
+  * on any non-finite gradient the step is skipped and the scale halves
+  * after ``growth_interval`` consecutive good steps the scale doubles
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    param_dtype: Any = jnp.float32     # master weights
+    compute_dtype: Any = jnp.bfloat16  # matmul/activation dtype
+    output_dtype: Any = jnp.float32    # logits / loss dtype
+
+    def cast_to_compute(self, tree: Any) -> Any:
+        return jax.tree.map(
+            lambda x: x.astype(self.compute_dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x,
+            tree,
+        )
+
+    def cast_to_param(self, tree: Any) -> Any:
+        return jax.tree.map(
+            lambda x: x.astype(self.param_dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x,
+            tree,
+        )
+
+
+def policy_from_name(name: str) -> Policy:
+    name = name.lower()
+    if name in ("bf16", "bfloat16", "mixed_bf16"):
+        return Policy(jnp.float32, jnp.bfloat16, jnp.float32)
+    if name in ("fp16", "float16", "mixed_fp16"):
+        return Policy(jnp.float32, jnp.float16, jnp.float32)
+    if name in ("fp32", "float32"):
+        return Policy(jnp.float32, jnp.float32, jnp.float32)
+    raise ValueError(f"unknown precision policy {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Dynamic loss scaling (fp16 only; identity for bf16/fp32)
+# ---------------------------------------------------------------------------
+
+def init_loss_scale(enabled: bool, init_scale: float = 2.0 ** 15) -> dict:
+    return {
+        "scale": jnp.float32(init_scale if enabled else 1.0),
+        "good_steps": jnp.int32(0),
+        "enabled": jnp.bool_(enabled),
+    }
+
+
+def scale_loss(loss_scale: dict, loss: jax.Array) -> jax.Array:
+    return loss * loss_scale["scale"].astype(loss.dtype)
+
+
+def all_finite(tree: Any) -> jax.Array:
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(tree)
+              if jnp.issubdtype(x.dtype, jnp.floating)]
+    if not leaves:
+        return jnp.bool_(True)
+    return jnp.stack(leaves).all()
+
+
+def unscale_grads(loss_scale: dict, grads: Any) -> Any:
+    inv = 1.0 / loss_scale["scale"]
+    return jax.tree.map(
+        lambda g: (g.astype(jnp.float32) * inv)
+        if jnp.issubdtype(g.dtype, jnp.floating) else g,
+        grads,
+    )
+
+
+def update_loss_scale(
+    loss_scale: dict, grads_finite: jax.Array, *, growth_interval: int = 2000,
+    growth_factor: float = 2.0, backoff_factor: float = 0.5,
+    max_scale: float = 2.0 ** 24, min_scale: float = 1.0,
+) -> dict:
+    enabled = loss_scale["enabled"]
+    scale = loss_scale["scale"]
+    good = loss_scale["good_steps"]
+    new_good = jnp.where(grads_finite, good + 1, 0)
+    grow = new_good >= growth_interval
+    new_scale = jnp.where(
+        grads_finite,
+        jnp.where(grow, jnp.minimum(scale * growth_factor, max_scale), scale),
+        jnp.maximum(scale * backoff_factor, min_scale),
+    )
+    new_good = jnp.where(grow, 0, new_good)
+    return {
+        "scale": jnp.where(enabled, new_scale, scale),
+        "good_steps": jnp.where(enabled, new_good, good),
+        "enabled": enabled,
+    }

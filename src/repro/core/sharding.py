@@ -1,0 +1,243 @@
+"""Logical-axis sharding machinery.
+
+Every parameter / activation / cache leaf in this framework carries a tuple of
+*logical* axis names (e.g. ``("embed", "mlp")``).  A :class:`ShardingRules`
+table maps logical names onto mesh axes.  This is the JAX-native analogue of
+Megatron's parallel groups: the paper's TP/DP/ZeRO choices become different
+rule tables over the same model definition.
+
+Divisibility is handled leniently: if a mesh axis does not evenly divide the
+corresponding array dimension, that dimension falls back to replication (the
+same thing Megatron does when a head count is smaller than the TP group).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Logical axis names used across the model zoo.
+# ---------------------------------------------------------------------------
+#   batch      -- global batch dimension (data parallel)
+#   seq        -- sequence dimension of activations
+#   embed      -- d_model (rows of weight matrices kept replicated under TP)
+#   heads      -- query heads (Megatron column-parallel attention)
+#   kv_heads   -- key/value heads
+#   head_dim   -- per-head feature dim
+#   mlp        -- FFN hidden dim (column-parallel W1 / row-parallel W2)
+#   vocab      -- embedding table rows / logits dim
+#   layers     -- stacked-layer leading dim (never sharded; scanned)
+#   experts    -- MoE expert dim (expert parallelism)
+#   expert_mlp -- FFN hidden inside an expert
+#   ssm_state  -- SSD / RWKV recurrent state dim
+#   conv       -- conv kernel taps
+#   cache_batch, cache_seq, cache_heads -- KV-cache dims at decode time
+#   stage      -- pipeline stage dim (sharded over the "pipe" mesh axis)
+
+
+MeshAxis = str | None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Maps logical axis names to mesh axis names (or None = replicated)."""
+
+    rules: Mapping[str, MeshAxis]
+    name: str = "custom"
+
+    def mesh_axis(self, logical: str | None) -> MeshAxis:
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+    def with_overrides(self, name: str | None = None, **overrides: MeshAxis) -> "ShardingRules":
+        merged = dict(self.rules)
+        merged.update(overrides)
+        return ShardingRules(rules=merged, name=name or self.name + "+")
+
+
+def _base_rules(
+    *, data_axis: MeshAxis, model_axis: MeshAxis, extra: Mapping[str, MeshAxis] | None = None,
+    name: str = "custom",
+) -> ShardingRules:
+    rules: dict[str, MeshAxis] = {
+        "batch": data_axis,
+        "seq": None,
+        "embed": None,
+        "heads": model_axis,
+        "kv_heads": model_axis,
+        "head_dim": None,
+        "mlp": model_axis,
+        "vocab": model_axis,
+        "layers": None,
+        "stage": "pipe",
+        "experts": data_axis,
+        "expert_mlp": model_axis,
+        "ssm_heads": model_axis,
+        "ssm_state": None,
+        "conv": None,
+        "cache_batch": data_axis,
+        "cache_seq": model_axis,
+        "cache_heads": None,
+        "act_embed": None,
+        "act_heads": model_axis,
+        "act_mlp": model_axis,
+    }
+    if extra:
+        rules.update(extra)
+    return ShardingRules(rules=rules, name=name)
+
+
+def megatron_rules(data_axis: str = "data", model_axis: str = "model") -> ShardingRules:
+    """The paper's strategy: Megatron TP over `model`, DP (+ZeRO-1) over `data`."""
+    return _base_rules(data_axis=data_axis, model_axis=model_axis, name="megatron_tp")
+
+
+def fsdp_rules(data_axis: str = "data", model_axis: str = "model") -> ShardingRules:
+    """ZeRO-3 / FSDP-style: parameters sharded over data on the embed dim too.
+
+    This is the sharded-data-parallel baseline the paper compares against
+    (DeepSpeed ZeRO-3 / PyTorch FSDP): weights are sharded over the DP group
+    and all-gathered per layer by GSPMD.
+    """
+    return _base_rules(
+        data_axis=data_axis,
+        model_axis=model_axis,
+        extra={"embed": data_axis},
+        name="fsdp",
+    )
+
+
+def dp_only_rules(data_axis: str = "data", model_axis: str | None = None) -> ShardingRules:
+    """Pure data parallelism (model replicated) -- the smallest-model regime."""
+    return _base_rules(data_axis=data_axis, model_axis=None, name="dp_only")
+
+
+def tp_only_rules(data_axis: str | None = None, model_axis: str = "model") -> ShardingRules:
+    return _base_rules(data_axis=None, model_axis=model_axis, name="tp_only")
+
+
+PRESETS = {
+    "megatron_tp": megatron_rules,
+    "fsdp": fsdp_rules,
+    "dp_only": dp_only_rules,
+    "tp_only": tp_only_rules,
+}
+
+
+# ---------------------------------------------------------------------------
+# Building NamedShardings from logical axes
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh: Mesh, axis: MeshAxis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def partition_spec(
+    shape: Sequence[int], axes: Sequence[str | None], mesh: Mesh, rules: ShardingRules
+) -> P:
+    """PartitionSpec for one leaf; replicates dims that do not divide."""
+    if len(shape) != len(axes):
+        raise ValueError(f"shape {tuple(shape)} vs logical axes {axes}: rank mismatch")
+    spec: list[MeshAxis] = []
+    used: set[str] = set()
+    for dim, logical in zip(shape, axes):
+        mesh_axis = rules.mesh_axis(logical)
+        if mesh_axis is None:
+            spec.append(None)
+            continue
+        axes_tuple = mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,)
+        if any(a in used for a in axes_tuple):
+            spec.append(None)  # a mesh axis may shard only one dim
+            continue
+        size = _axis_size(mesh, mesh_axis)
+        if size <= 1 or dim % size != 0:
+            spec.append(None)
+            continue
+        used.update(axes_tuple)
+        spec.append(mesh_axis)
+    return P(*spec)
+
+
+def sharding_for(
+    shape: Sequence[int], axes: Sequence[str | None], mesh: Mesh, rules: ShardingRules
+) -> NamedSharding:
+    return NamedSharding(mesh, partition_spec(shape, axes, mesh, rules))
+
+
+def tree_shardings(shape_tree: Any, axes_tree: Any, mesh: Mesh, rules: ShardingRules) -> Any:
+    """Map (shapes, logical axes) trees -> NamedSharding tree.
+
+    ``shape_tree`` leaves may be arrays or ShapeDtypeStructs (anything with
+    ``.shape``); ``axes_tree`` leaves are tuples of logical names (so we treat
+    tuples as leaves there).
+    """
+
+    def is_axes_leaf(x: Any) -> bool:
+        return x is None or (isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x))
+
+    axes_leaves, axes_treedef = jax.tree.flatten(axes_tree, is_leaf=is_axes_leaf)
+    shape_leaves, shape_treedef = jax.tree.flatten(shape_tree)
+    if len(axes_leaves) != len(shape_leaves):
+        raise ValueError(
+            f"axes tree ({len(axes_leaves)} leaves) does not match shape tree "
+            f"({len(shape_leaves)} leaves)"
+        )
+    shardings = [
+        sharding_for(s.shape, a if a is not None else (None,) * len(s.shape), mesh, rules)
+        for s, a in zip(shape_leaves, axes_leaves)
+    ]
+    return jax.tree.unflatten(shape_treedef, shardings)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: shard optimizer states over the data-parallel axis.
+# ---------------------------------------------------------------------------
+
+def zero_partition_spec(
+    shape: Sequence[int], base_spec: P, mesh: Mesh, dp_axis: str
+) -> P:
+    """Add the DP axis to the first divisible, unsharded dim of ``base_spec``.
+
+    DeepSpeed ZeRO-1 flattens and shards 1-D over DP ranks; the GSPMD-native
+    equivalent is sharding one tensor dim over the data axis, which yields the
+    same 1/DP memory footprint and the same reduce-scatter + all-gather
+    communication pattern for the optimizer step.
+    """
+    spec = list(base_spec) + [None] * (len(shape) - len(base_spec))
+    used: set[str] = set()
+    for entry in spec:
+        if entry is None:
+            continue
+        for a in (entry if isinstance(entry, tuple) else (entry,)):
+            used.add(a)
+    if dp_axis in used:
+        return P(*spec)
+    dp = mesh.shape[dp_axis]
+    if dp <= 1:
+        return P(*spec)
+    for i, (dim, entry) in enumerate(zip(shape, spec)):
+        if entry is None and dim % dp == 0 and dim >= dp:
+            spec[i] = dp_axis
+            return P(*spec)
+    return P(*spec)
+
+
+def zero_sharding(
+    shape: Sequence[int], base: NamedSharding, dp_axis: str
+) -> NamedSharding:
+    return NamedSharding(base.mesh, zero_partition_spec(shape, base.spec, base.mesh, dp_axis))
+
+
+def tree_zero_shardings(shape_tree: Any, base_shardings: Any, dp_axis: str) -> Any:
+    return jax.tree.map(
+        lambda s, sh: zero_sharding(s.shape, sh, dp_axis), shape_tree, base_shardings
+    )

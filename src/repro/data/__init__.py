@@ -1,0 +1,1 @@
+from repro.data.synthetic import SyntheticCorpus, make_batch_iterator  # noqa: F401

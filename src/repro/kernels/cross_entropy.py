@@ -1,0 +1,115 @@
+"""Blocked cross-entropy as a Pallas TPU kernel (logits never hit HBM).
+
+The §Perf attribution showed the unembedding/CE path dominating wide-vocab
+models: the (tokens, vocab) logits tensor is pure intermediate state.  This
+kernel streams W column-blocks through VMEM, maintaining a running
+(max, sumexp, label-logit) triple per token row — an online-logsumexp, the
+CE analogue of flash attention's online softmax.
+
+Grid = (n_token_blocks, n_vocab_blocks); the vocab loop is minor-most so the
+running stats live in VMEM scratch.  Returns (lse, label_logit) per token;
+loss = lse - label_logit.  Backward recomputes via the chunked jnp path
+(models/model.py), so the kernel is wrapped with a custom_vjp.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_N = 256
+DEFAULT_BLOCK_V = 2048
+NEG_INF = -1e30
+
+
+def _ce_kernel(h_ref, w_ref, y_ref, lse_ref, ylogit_ref,
+               m_ref, s_ref, yl_ref, *, block_v: int, nv: int, valid_vocab: int):
+    iv = pl.program_id(1)
+
+    @pl.when(iv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        yl_ref[...] = jnp.full_like(yl_ref, NEG_INF)
+
+    h = h_ref[...].astype(jnp.float32)            # (bn, d)
+    w = w_ref[...].astype(jnp.float32)            # (d, bv)
+    logits = jax.lax.dot_general(
+        h, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # mask padded vocab columns
+    col = iv * block_v + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    logits = jnp.where(col < valid_vocab, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    s_ref[...] = s_ref[...] * corr + jnp.sum(jnp.exp(logits - m_new[:, None]), axis=1)
+    m_ref[...] = m_new
+
+    # gather this block's label logits
+    y = y_ref[...]                                 # (bn,)
+    in_block = (y >= iv * block_v) & (y < (iv + 1) * block_v)
+    local = jnp.clip(y - iv * block_v, 0, block_v - 1)
+    picked = jnp.take_along_axis(logits, local[:, None], axis=1)[:, 0]
+    yl_ref[...] = jnp.where(in_block, picked, yl_ref[...])
+
+    @pl.when(iv == nv - 1)
+    def _finish():
+        lse_ref[...] = m_ref[...] + jnp.log(s_ref[...])
+        ylogit_ref[...] = yl_ref[...]
+
+
+def ce_logsumexp_pallas(h: jax.Array, w: jax.Array, labels: jax.Array, *,
+                        valid_vocab: int | None = None,
+                        block_n: int = DEFAULT_BLOCK_N,
+                        block_v: int = DEFAULT_BLOCK_V,
+                        interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """h: (N, d); w: (d, V); labels: (N,) -> (lse (N,), label_logit (N,))."""
+    N, d = h.shape
+    V = w.shape[1]
+    valid_vocab = valid_vocab or V
+    block_n = _fit(block_n, N)
+    block_v = _fit(block_v, V)
+    nn, nv = N // block_n, V // block_v
+    return pl.pallas_call(
+        functools.partial(_ce_kernel, block_v=block_v, nv=nv,
+                          valid_vocab=valid_vocab),
+        grid=(nn, nv),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, block_v), lambda i, j: (0, j)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N,), jnp.float32),
+            jax.ShapeDtypeStruct((N,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_n,), jnp.float32),
+            pltpu.VMEM((block_n,), jnp.float32),
+            pltpu.VMEM((block_n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(h, w, labels)
+
+
+def _fit(block: int, n: int) -> int:
+    b = min(block, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def cross_entropy(h, w, labels, valid_vocab=None, interpret=False):
+    """Mean CE loss over tokens; logits stay in VMEM."""
+    lse, ylogit = ce_logsumexp_pallas(h, w, labels, valid_vocab=valid_vocab,
+                                      interpret=interpret)
+    return jnp.mean(lse - ylogit)

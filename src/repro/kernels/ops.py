@@ -1,0 +1,87 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python for correctness validation against ``ref.py``; on TPU
+they lower via Mosaic.  GQA is handled here (the kernels see equal head
+counts), as are layout conversion and seq padding to block multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import rmsnorm as rn
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(
+    q: jax.Array,   # (B, Sq, Hq, hd) — model layout
+    k: jax.Array,   # (B, Skv, Hkv, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sliding_window: int | None = None,
+    q_offset: int = 0,
+    block_q: int = fa.DEFAULT_BLOCK_Q,
+    block_k: int = fa.DEFAULT_BLOCK_K,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """FlashAttention over the model's (B, S, H, hd) layout."""
+    if interpret is None:
+        interpret = _on_cpu()
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if G > 1:
+        kt = jnp.repeat(kt, G, axis=1)
+        vt = jnp.repeat(vt, G, axis=1)
+    bq = _fit_block(block_q, Sq)
+    bk = _fit_block(block_k, Skv)
+    out = fa.flash_attention(qt, kt, vt, causal, sliding_window, q_offset,
+                             bq, bk, interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _fit_block(block: int, s: int) -> int:
+    b = min(block, s)
+    while s % b != 0:
+        b -= 1
+    return b
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5,
+            interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = _on_cpu()
+    return rn.rmsnorm(x, w, eps, rn.DEFAULT_BLOCK_ROWS, interpret)
+
+
+def cross_entropy(h: jax.Array, w: jax.Array, labels: jax.Array,
+                  valid_vocab: int | None = None,
+                  interpret: bool | None = None) -> jax.Array:
+    """Blocked CE: the (N, V) logits tensor never reaches HBM."""
+    from repro.kernels import cross_entropy as ce
+    if interpret is None:
+        interpret = _on_cpu()
+    return ce.cross_entropy(h, w, labels, valid_vocab=valid_vocab,
+                            interpret=interpret)
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array,
+           interpret: bool | None = None) -> jax.Array:
+    """Fused silu(x@w1) * (x@w3); x: (..., d)."""
+    from repro.kernels import swiglu as sg
+    if interpret is None:
+        interpret = _on_cpu()
+    shape = x.shape
+    out = sg.swiglu(x.reshape(-1, shape[-1]), w1, w3, interpret=interpret)
+    return out.reshape(*shape[:-1], w1.shape[1])

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(
+    q: jax.Array,   # (B, Hq, Sq, hd)
+    k: jax.Array,   # (B, Hkv, Skv, hd)
+    v: jax.Array,   # (B, Hkv, Skv, hd)
+    *,
+    causal: bool = True,
+    sliding_window: int | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    B, Hq, Sq, hd = q.shape
+    _, Hkv, Skv, _ = k.shape
+    G = Hq // Hkv
+    if G > 1:
+        k = jnp.repeat(k, G, axis=1)
+        v = jnp.repeat(v, G, axis=1)
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Skv)
+    mask = None
+    if causal:
+        mask = kpos[None, :] <= qpos[:, None]
+    if sliding_window is not None:
+        w = qpos[:, None] - kpos[None, :] < sliding_window
+        mask = w if mask is None else mask & w
+    if mask is not None:
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu_ref(x: jax.Array, w1: jax.Array, w3: jax.Array) -> jax.Array:
+    """Fused gate: silu(x@w1) * (x@w3)."""
+    a = x @ w1
+    b = x @ w3
+    return (jax.nn.silu(a.astype(jnp.float32)) * b.astype(jnp.float32)).astype(x.dtype)
+
+
+def cross_entropy_ref(h: jax.Array, w: jax.Array, labels: jax.Array,
+                      valid_vocab: int | None = None) -> jax.Array:
+    """Mean CE with full logits materialized (the oracle)."""
+    logits = (h.astype(jnp.float32) @ w.astype(jnp.float32))
+    V = logits.shape[-1]
+    if valid_vocab is not None and valid_vocab < V:
+        logits = jnp.where(jnp.arange(V)[None, :] >= valid_vocab, -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - ll)

@@ -1,0 +1,52 @@
+"""Fused SwiGLU gate as a Pallas TPU kernel: silu(x@w1) * (x@w3) in one
+VMEM-resident pass (the two gate matmuls share the x block; the product
+never round-trips HBM between them)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 256
+DEFAULT_BLOCK_F = 512
+
+
+def _swiglu_kernel(x_ref, w1_ref, w3_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    a = jax.lax.dot_general(x, w1_ref[...].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    b = jax.lax.dot_general(x, w3_ref[...].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o_ref[...] = (a * jax.nn.sigmoid(a) * b).astype(o_ref.dtype)
+
+
+def swiglu(x2d: jax.Array, w1: jax.Array, w3: jax.Array, *,
+           block_n: int = DEFAULT_BLOCK_N, block_f: int = DEFAULT_BLOCK_F,
+           interpret: bool = False) -> jax.Array:
+    """x2d: (N, d); w1/w3: (d, F) -> (N, F)."""
+    N, d = x2d.shape
+    F = w1.shape[1]
+    bn, bf = _fit(block_n, N), _fit(block_f, F)
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=(N // bn, F // bf),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bf), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, F), x2d.dtype),
+        interpret=interpret,
+    )(x2d, w1, w3)
+
+
+def _fit(block: int, n: int) -> int:
+    b = min(block, n)
+    while n % b != 0:
+        b -= 1
+    return b

@@ -1,0 +1,230 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract memory / cost / collective analysis.
+
+This is the no-hardware proof that the distribution config is coherent:
+a sharding mismatch, an OOM at compile, or an unsupported collective all
+fail here.  Results feed EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --multi-pod
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import hlo_cost
+from repro.analysis import roofline as rl
+from repro.configs import ASSIGNED, get_config
+from repro.configs.shapes import SHAPES, InputShape, applicable
+from repro.core import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import axes_tree, shape_dtype_tree
+from repro.models.model import Model
+from repro.optim import AdamWConfig
+from repro.runtime.serve_loop import (
+    build_decode_step, cache_sds_and_shardings, decode_batch_specs)
+from repro.runtime.train_loop import (
+    TrainPlan, batch_shardings, batch_specs, jit_train_step,
+    train_state_shardings)
+
+
+def train_state_sds(model: Model) -> dict:
+    p32 = model.param_shapes(jnp.float32)
+    f32 = lambda: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p32)
+    scalar = lambda dt: jax.ShapeDtypeStruct((), dt)
+    return {
+        "params": p32,
+        "opt": {"mu": f32(), "nu": f32(), "count": scalar(jnp.int32)},
+        "loss_scale": {"scale": scalar(jnp.float32),
+                       "good_steps": scalar(jnp.int32),
+                       "enabled": scalar(jnp.bool_)},
+        "step": scalar(jnp.int32),
+    }
+
+
+def default_plan(multi_pod: bool, *, zero1: bool = True, gas: int = 1,
+                 rules: str = "megatron_tp") -> TrainPlan:
+    return TrainPlan(
+        rules=rules, zero1=zero1, gas=gas, precision="bf16",
+        extra_dp_axes=("pod",) if multi_pod else (),
+    )
+
+
+def lower_step(arch: str, shape_name: str, *, multi_pod: bool,
+               plan: TrainPlan | None = None, q_chunk: int = 1024,
+               cfg=None):
+    """Builds and lowers the right step for (arch, shape). Returns
+    (lowered, meta) — meta carries tokens/kind/chips for the roofline."""
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    plan = plan or default_plan(multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    model = Model(cfg, jnp.bfloat16, q_chunk=q_chunk)
+    meta = {"arch": arch, "shape": shape_name, "chips": chips,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "kind": shape.kind, "plan": plan.rules + ("+zero1" if plan.zero1 else ""),
+            "gas": plan.gas}
+
+    if shape.kind == "train":
+        meta["tokens"] = shape.global_batch * shape.seq_len
+        step = jit_train_step(model, AdamWConfig(), plan, mesh,
+                              shape.global_batch, shape.seq_len)
+        bsds, _ = batch_specs(cfg, shape.global_batch, shape.seq_len)
+        lowered = step.lower(train_state_sds(model), bsds)
+    elif shape.kind == "prefill":
+        meta["tokens"] = shape.global_batch * shape.seq_len
+        rules = plan.sharding_rules()
+        psds = model.param_shapes(jnp.float32)
+        psh = shd.tree_shardings(psds, model.param_axes(), mesh, rules)
+        bsds, baxes = batch_specs(cfg, shape.global_batch, shape.seq_len)
+        bsh = shd.tree_shardings(bsds, baxes, mesh, rules)
+        fn = jax.jit(lambda p, b: model.prefill(p, b, shape.seq_len),
+                     in_shardings=(psh, bsh))
+        lowered = fn.lower(psds, bsds)
+    elif shape.kind == "decode":
+        meta["tokens"] = shape.global_batch
+        step = build_decode_step(model, mesh, plan, shape.global_batch, shape.seq_len)
+        psds = model.param_shapes(jnp.float32)
+        csds, _ = cache_sds_and_shardings(model, shape.global_batch,
+                                          shape.seq_len, mesh, plan)
+        bsds, _ = decode_batch_specs(cfg, shape.global_batch)
+        lowered = step.lower(psds, csds, bsds)
+    else:
+        raise ValueError(shape.kind)
+    return lowered, meta
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
+               plan: TrainPlan | None = None, verbose: bool = True,
+               q_chunk: int = 1024, cfg=None, tag: str = "") -> dict:
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": reason}
+        if verbose:
+            print(f"[skip] {arch} x {shape_name} ({mesh_name}): {reason}")
+        return rec
+
+    rec: dict[str, Any] = {}
+    try:
+        t0 = time.time()
+        lowered, meta = lower_step(arch, shape_name, multi_pod=multi_pod,
+                                   plan=plan, q_chunk=q_chunk, cfg=cfg)
+        if tag:
+            meta["tag"] = tag
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        cost = compiled.cost_analysis() or {}
+        try:
+            ma = compiled.memory_analysis()
+            mem = {
+                "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+                "output_bytes": getattr(ma, "output_size_in_bytes", None),
+                "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(ma, "generated_code_size_in_bytes", None),
+            }
+        except Exception as e:  # backend may not support it
+            mem = {"error": str(e)}
+        hlo_text = compiled.as_text()
+        # trip-count-corrected cost model (XLA's cost_analysis counts each
+        # while body once — useless for scanned layer stacks; see
+        # analysis/hlo_cost.py)
+        t0 = time.time()
+        totals = hlo_cost.analyze(hlo_text)
+        t_analyze = time.time() - t0
+        flops = totals.flops
+        byts = totals.traffic_bytes
+        coll = {k: float(v) for k, v in totals.collective_bytes.items()}
+        coll_total = totals.collective_total
+        terms = rl.roofline_terms(flops, byts, coll_total, meta["chips"])
+        mf = rl.model_flops(cfg, tokens=meta["tokens"], kind=meta["kind"])
+        rec = {
+            **meta,
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "analyze_s": round(t_analyze, 2),
+            "flops_per_device": flops,
+            "dot_flops_per_device": totals.dot_flops,
+            "bytes_per_device": byts,
+            "xla_cost_analysis": {"flops": float(cost.get("flops", 0.0)),
+                                  "bytes_accessed": float(cost.get("bytes accessed", 0.0))},
+            "collective_bytes": coll,
+            "collective_counts": {k: float(v) for k, v in totals.collective_count.items()},
+            "collective_bytes_total": coll_total,
+            "unknown_trip_loops": totals.unknown_trip_loops,
+            "memory_analysis": mem,
+            "roofline": terms.as_dict(),
+            "model_flops": mf,
+            "useful_flops_ratio": (mf / (flops * meta["chips"])) if flops else None,
+        }
+        if verbose:
+            dom = terms.dominant
+            print(f"[ok] {arch} x {shape_name} ({mesh_name}): "
+                  f"lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+                  f"compute {terms.compute_s*1e3:.2f}ms mem {terms.memory_s*1e3:.2f}ms "
+                  f"coll {terms.collective_s*1e3:.2f}ms -> {dom}-bound | "
+                  f"useful-flops ratio {rec['useful_flops_ratio'] and round(rec['useful_flops_ratio'],3)}")
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()}
+        if verbose:
+            print(f"[ERROR] {arch} x {shape_name} ({mesh_name}): {e}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(set(ASSIGNED) | {"all"}), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES) + ["all"], default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all archs x shapes (single-pod unless --both-meshes)")
+    ap.add_argument("--out", default=None, help="append JSON records here")
+    ap.add_argument("--print-memory", action="store_true")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if (args.all or args.arch in (None, "all")) else [args.arch]
+    shapes = sorted(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = dryrun_one(arch, shape, multi_pod=mp)
+                records.append(rec)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        rec2 = {k: v for k, v in rec.items() if k != "traceback"}
+                        f.write(json.dumps(rec2) + "\n")
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"\ndry-run summary: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

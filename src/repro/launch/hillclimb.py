@@ -1,0 +1,145 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimbing driver (EXPERIMENTS.md §Perf).
+
+Each named variant is a (config transform, plan transform) pair applied to
+one of the three chosen (arch x shape) pairs; the dry-run is re-lowered and
+the roofline terms recorded, giving hypothesis -> change -> before/after.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hillclimb --pair qwen3 --variant baseline
+  PYTHONPATH=src python -m repro.launch.hillclimb --all --out results/hillclimb.json
+"""
+import argparse
+import dataclasses
+import json
+
+from repro.configs import get_config
+from repro.launch.dryrun import dryrun_one, default_plan
+
+# the three chosen pairs: most collective-bound / worst useful-flops ratio /
+# most representative of the paper's technique (dense Megatron TP + ZeRO-1)
+PAIRS = {
+    "arctic": ("arctic-480b", "train_4k"),
+    "seamless": ("seamless-m4t-medium", "train_4k"),
+    "qwen3": ("qwen3-32b", "train_4k"),
+    "qwen3_decode": ("qwen3-32b", "decode_32k"),
+    "llama4_prefill": ("llama4-maverick-400b-a17b", "prefill_32k"),
+}
+
+
+def _v(cfg_fn=None, plan_fn=None, note=""):
+    return {"cfg": cfg_fn, "plan": plan_fn, "note": note}
+
+
+VARIANTS = {
+    "baseline": _v(note="paper-faithful megatron_tp + zero1, gas=1"),
+    "pad_vocab256": _v(
+        cfg_fn=lambda c: dataclasses.replace(c, vocab_pad_multiple=256),
+        note="pad embedding/lm-head so vocab shards over model axis"),
+    "ep_model": _v(
+        plan_fn=lambda p: dataclasses.replace(
+            p, rule_overrides=(("experts", "model"), ("expert_mlp", None))),
+        note="expert parallelism over the model axis instead of data"),
+    "embed_replicated": _v(
+        plan_fn=lambda p: dataclasses.replace(
+            p, rule_overrides=(("vocab", None),)),
+        note="replicate the (small-vocab) embedding: kills gather all-reduces"),
+    "ep_model+embed_repl": _v(
+        plan_fn=lambda p: dataclasses.replace(
+            p, rule_overrides=(("experts", "model"), ("expert_mlp", None),
+                               ("vocab", None))),
+        note="both expert-parallel-on-model and replicated embedding"),
+    "fsdp": _v(
+        plan_fn=lambda p: dataclasses.replace(p, rules="fsdp"),
+        note="ZeRO-3/FSDP-style parameter sharding over data"),
+    "gas4": _v(
+        plan_fn=lambda p: dataclasses.replace(p, gas=4),
+        note="4 gradient-accumulation microbatches (paper's GAS knob)"),
+    "seq_shard": _v(
+        plan_fn=lambda p: dataclasses.replace(
+            p, rule_overrides=(("seq", "model"),)),
+        note="sequence-parallel residual stream (Megatron-SP flavoured)"),
+    "no_zero1": _v(
+        plan_fn=lambda p: dataclasses.replace(p, zero1=False),
+        note="replicated optimizer states (paper's ZeRO-1 ablation)"),
+    "moe_dp_attn": _v(
+        plan_fn=lambda p: dataclasses.replace(
+            p, rule_overrides=(("heads", None), ("kv_heads", None),
+                               ("mlp", None), ("act_heads", None),
+                               ("act_mlp", None))),
+        note="drop TP on attention/dense blocks (EP already shards the "
+             "experts = the bulk of params); kills per-layer TP all-reduces"),
+    "kv_int8": _v(
+        cfg_fn=lambda c: dataclasses.replace(c, kv_quant=True),
+        note="int8 KV cache with per-token/head scales (serving)"),
+    "fsdp_seq": _v(
+        plan_fn=lambda p: dataclasses.replace(
+            p, rule_overrides=(("heads", None), ("kv_heads", None),
+                               ("mlp", None), ("act_heads", None),
+                               ("act_mlp", None), ("seq", "model"),
+                               ("embed", "data"))),
+        note="FSDP weight sharding (over data) + sequence-parallel "
+             "activations (over model) — replaces Megatron TP entirely"),
+    "moe_dp_attn+seq": _v(
+        plan_fn=lambda p: dataclasses.replace(
+            p, rule_overrides=(("heads", None), ("kv_heads", None),
+                               ("mlp", None), ("act_heads", None),
+                               ("act_mlp", None), ("seq", "model"))),
+        note="dp attention + sequence sharded over the idle model axis"),
+}
+
+
+def run_variant(pair: str, variant: str, out: str | None = None) -> dict:
+    arch, shape = PAIRS[pair]
+    spec = VARIANTS[variant]
+    cfg = get_config(arch)
+    if spec["cfg"]:
+        cfg = spec["cfg"](cfg)
+    plan = default_plan(False)
+    if spec["plan"]:
+        plan = spec["plan"](plan)
+    rec = dryrun_one(arch, shape, multi_pod=False, plan=plan, cfg=cfg,
+                     tag=f"{pair}:{variant}")
+    rec["variant"] = variant
+    rec["note"] = spec["note"]
+    if out and rec.get("status") == "ok":
+        with open(out, "a") as f:
+            f.write(json.dumps({k: v for k, v in rec.items()
+                                if k != "traceback"}) + "\n")
+    elif out:
+        with open(out, "a") as f:
+            f.write(json.dumps({"pair": pair, "variant": variant,
+                                "status": rec.get("status"),
+                                "error": rec.get("error")}) + "\n")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=sorted(PAIRS), default=None)
+    ap.add_argument("--variant", choices=sorted(VARIANTS), default="baseline")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    plan_matrix = {
+        "qwen3": ["baseline", "pad_vocab256", "seq_shard", "gas4", "fsdp", "no_zero1",
+                  "moe_dp_attn+seq", "fsdp_seq"],
+        "qwen3_decode": ["baseline", "kv_int8"],
+        "llama4_prefill": ["baseline", "seq_shard", "kv_int8"],
+        "seamless": ["baseline", "pad_vocab256", "embed_replicated"],
+        "arctic": ["baseline", "ep_model", "embed_replicated", "ep_model+embed_repl",
+                   "pad_vocab256", "moe_dp_attn", "moe_dp_attn+seq", "seq_shard",
+                   "fsdp_seq"],
+    }
+    if args.all:
+        for pair, variants in plan_matrix.items():
+            for v in variants:
+                run_variant(pair, v, args.out)
+    else:
+        run_variant(args.pair or "qwen3", args.variant, args.out)
+
+
+if __name__ == "__main__":
+    main()

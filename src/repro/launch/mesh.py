@@ -1,0 +1,38 @@
+"""Mesh construction for the production target and CPU experiments.
+
+TPU v5e target: one pod = a 16x16 chip grid (256 chips); multi-pod = 2 pods
+(512 chips) with a slower "pod" axis (DCN-class links).  The paper's rule —
+TP inside the fast interconnect, DP (or PP) across the slow one — maps to
+TP on "model" (intra-pod ICI) and DP/PP on "data"/"pod".
+
+``make_production_mesh`` is a *function* so importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before first jax use).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def _mesh(shape, axes):
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_mesh_2d(data: int, model: int):
+    """Arbitrary (data, model) mesh — used by tests/benchmarks on CPU."""
+    return _mesh((data, model), ("data", "model"))
+
+
+def make_pipeline_mesh(pipe: int, data: int = 1):
+    """Mesh for pipeline-parallel experiments: stages on the "pipe" axis."""
+    return _mesh((pipe, data), ("pipe", "data"))
+
+
+def single_device_mesh():
+    return _mesh((1, 1), ("data", "model"))

@@ -1,0 +1,99 @@
+"""Training launcher.
+
+On a real v5e deployment each host runs this under the TPU runtime and
+``jax.distributed.initialize()`` wires the pod slice together; on this CPU
+container it drives the same code path on a single device (or virtual
+devices via XLA_FLAGS), with reduced configs for smoke-scale runs.
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --reduced \
+      --steps 100 --global-batch 8 --seq-len 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpointing import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import ASSIGNED, PAPER, get_config
+from repro.data import SyntheticCorpus, make_batch_iterator
+from repro.launch.mesh import make_mesh_2d
+from repro.models.model import Model
+from repro.optim import AdamWConfig, cosine_schedule
+from repro.runtime.train_loop import TrainPlan, init_train_state, jit_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ASSIGNED + PAPER), default="yi-6b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale variant of the architecture")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--gas", type=int, default=1)
+    ap.add_argument("--precision", choices=["bf16", "fp16", "fp32"], default="fp32")
+    ap.add_argument("--rules", choices=["megatron_tp", "fsdp", "dp_only", "tp_only"],
+                    default="megatron_tp")
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--data-parallel", type=int, default=None)
+    ap.add_argument("--model-parallel", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    n_dev = jax.device_count()
+    dp = args.data_parallel or n_dev
+    tp = args.model_parallel or (n_dev // dp)
+    mesh = make_mesh_2d(dp, max(tp, 1))
+    print(f"arch={cfg.name} params={Model(cfg).n_params():,} mesh=({dp},{tp}) "
+          f"rules={args.rules} zero1={not args.no_zero1} precision={args.precision}")
+
+    model = Model(cfg, jnp.float32 if args.precision == "fp32" else jnp.bfloat16)
+    plan = TrainPlan(rules=args.rules, zero1=not args.no_zero1,
+                     gas=args.gas, precision=args.precision)
+    opt = AdamWConfig(lr=cosine_schedule(args.lr, 10, args.steps))
+    state = init_train_state(model, jax.random.PRNGKey(args.seed), opt, plan)
+    start = 0
+    if args.ckpt_dir and (s := latest_step(args.ckpt_dir)) is not None:
+        like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        state = restore_checkpoint(args.ckpt_dir, s, like)
+        start = s
+        print(f"restored step {s} from {args.ckpt_dir}")
+
+    step_fn = jit_train_step(model, opt, plan, mesh, args.global_batch, args.seq_len)
+    extra = {}
+    if cfg.family == "encdec":
+        extra["frames"] = ((cfg.enc_seq_len, cfg.frontend_dim), "float32")
+    if cfg.family == "vlm":
+        extra["patches"] = ((cfg.num_patches, cfg.frontend_dim), "float32")
+    it = make_batch_iterator(
+        SyntheticCorpus(vocab_size=cfg.vocab_size, seed=args.seed),
+        seq_len=args.seq_len, global_batch=args.global_batch,
+        extra_specs={k: (sh, __import__("numpy").dtype(dt)) for k, (sh, dt) in extra.items()} or None)
+
+    t0 = time.time()
+    for i in range(start, args.steps):
+        state, metrics = step_fn(state, next(it))
+        if (i + 1) % args.log_every == 0:
+            dt = time.time() - t0
+            tok_s = args.global_batch * args.seq_len * args.log_every / dt
+            print(f"step {i+1:5d} loss {float(metrics['loss']):.4f} "
+                  f"scale {float(metrics['loss_scale']):.0f} "
+                  f"{tok_s:,.0f} tok/s")
+            t0 = time.time()
+        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, i + 1, state)
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""Transformer block builders: attention blocks (self / cross, GQA, SWA,
+qk-norm) and dense MLP blocks, as (spec, apply) pairs over explicit pytrees.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.common import ModelConfig, Spec
+
+
+def norm_spec(d: int, kind: str, axis: str = "embed") -> dict:
+    spec = {"scale": Spec((d,), (axis,), init="ones")}
+    if kind == "layernorm":
+        spec["bias"] = Spec((d,), (axis,), init="zeros")
+    return spec
+
+
+def attn_specs(cfg: ModelConfig, *, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    spec = {
+        "ln": norm_spec(d, cfg.norm),
+        "wq": Spec((d, hq * hd), ("embed", "heads")),
+        "wk": Spec((d, hkv * hd), ("embed", "kv_heads")),
+        "wv": Spec((d, hkv * hd), ("embed", "kv_heads")),
+        "wo": Spec((hq * hd, d), ("heads", "embed")),
+    }
+    if cfg.qk_norm and not cross:
+        spec["q_norm"] = Spec((hd,), ("head_dim",), init="ones")
+        spec["k_norm"] = Spec((hd,), ("head_dim",), init="ones")
+    return spec
+
+
+def _project_qkv(params: dict, xq: jax.Array, xkv: jax.Array, cfg: ModelConfig):
+    B, Sq, _ = xq.shape
+    Skv = xkv.shape[1]
+    hd = cfg.resolved_head_dim
+    q = (xq @ params["wq"]).reshape(B, Sq, cfg.n_heads, hd)
+    k = (xkv @ params["wk"]).reshape(B, Skv, cfg.n_kv_heads, hd)
+    v = (xkv @ params["wv"]).reshape(B, Skv, cfg.n_kv_heads, hd)
+    if "q_norm" in params:
+        q = layers.rms_norm(q, params["q_norm"], cfg.rms_eps)
+        k = layers.rms_norm(k, params["k_norm"], cfg.rms_eps)
+    return q, k, v
+
+
+def self_attn_block(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array | None = None,
+    causal: bool = True,
+    q_chunk: int = 1024,
+    return_kv: bool = False,
+):
+    """Full-sequence (train / prefill) self attention with residual.
+
+    With ``return_kv=True`` also returns the (possibly RoPE'd) K and V,
+    which prefill places into the decode cache."""
+    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps)
+    q, k, v = _project_qkv(params, h, h, cfg)
+    if cfg.pos == "rope":
+        pos = positions if positions is not None else jnp.arange(x.shape[1])
+        q = layers.apply_rope(q, pos, cfg.rope_theta)
+        k = layers.apply_rope(k, pos, cfg.rope_theta)
+    out = layers.attention(
+        q, k, v,
+        causal=causal,
+        sliding_window=cfg.sliding_window if causal else None,
+        softcap=cfg.attn_logit_softcap,
+        q_chunk=q_chunk,
+        use_flash=cfg.use_flash,
+    )
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, -1) @ params["wo"]
+    if return_kv:
+        return x + out, k, v
+    return x + out
+
+
+def self_attn_decode(
+    params: dict,
+    x: jax.Array,              # (B, 1, d)
+    cache: dict,               # {"k": (B, C, Hkv, hd), "v": ...} — C may be a ring
+    pos: jax.Array,            # scalar int32 — absolute write position
+    cfg: ModelConfig,
+) -> tuple[jax.Array, dict]:
+    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps)
+    q, k, v = _project_qkv(params, h, h, cfg)
+    if cfg.pos == "rope":
+        p = pos[None] if pos.ndim == 0 else pos
+        q = layers.apply_rope(q, p, cfg.rope_theta)
+        k = layers.apply_rope(k, p, cfg.rope_theta)
+    clen = cache["k"].shape[1]
+    slot = jnp.mod(pos, clen)
+    quant = "k_scale" in cache
+    if quant:
+        kq, ks = layers.kv_quantize(k)
+        vq, vs = layers.kv_quantize(v)
+        ck, cv = layers.cache_update(cache["k"], cache["v"], kq, vq, slot)
+        idx3 = (0, slot.astype(jnp.int32), 0)
+        cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks, idx3)
+        cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs, idx3)
+        k_att = layers.kv_dequantize(ck, cks, q.dtype)
+        v_att = layers.kv_dequantize(cv, cvs, q.dtype)
+        new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+    else:
+        ck, cv = layers.cache_update(cache["k"], cache["v"], k, v, slot)
+        k_att, v_att = ck.astype(q.dtype), cv.astype(q.dtype)
+        new_cache = {"k": ck, "v": cv}
+    # absolute position held by each ring slot (negative = not yet written);
+    # for a full-length cache this reduces to arange masked beyond `pos`.
+    slots = jnp.arange(clen)
+    kv_positions = pos - jnp.mod(pos - slots, clen)
+    out = layers.attention(
+        q, k_att, v_att,
+        causal=True,
+        q_offset=pos,
+        sliding_window=cfg.sliding_window,
+        softcap=cfg.attn_logit_softcap,
+        kv_positions=kv_positions,
+    )
+    B = x.shape[0]
+    out = out.reshape(B, 1, -1) @ params["wo"]
+    return x + out, new_cache
+
+
+def cross_attn_block(
+    params: dict,
+    x: jax.Array,
+    memory: jax.Array,         # encoder output (B, T, d)
+    cfg: ModelConfig,
+) -> jax.Array:
+    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps)
+    q, k, v = _project_qkv(params, h, memory, cfg)
+    out = layers.attention(q, k, v, causal=False, use_flash=cfg.use_flash)
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, -1) @ params["wo"]
+    return x + out
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    spec = {
+        "ln": norm_spec(d, cfg.norm),
+        "w1": Spec((d, ff), ("embed", "mlp")),
+        "w2": Spec((ff, d), ("mlp", "embed")),
+    }
+    if cfg.act == "swiglu":
+        spec["w3"] = Spec((d, ff), ("embed", "mlp"))
+    return spec
+
+
+def mlp_block(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps)
+    return x + layers.mlp(h, params, cfg.act)

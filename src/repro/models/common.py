@@ -1,0 +1,200 @@
+"""Declarative parameter specs + the universal ModelConfig.
+
+Parameters are declared as a pytree of :class:`Spec` leaves (shape + logical
+axes + initializer).  From the spec tree we can derive, *without allocating
+anything*:
+
+  * the logical-axes tree (for sharding rules),
+  * a ``jax.ShapeDtypeStruct`` tree (for ``.lower()`` in the dry-run),
+  * and, when we do want real arrays, an initialized param tree.
+
+This is what lets the multi-pod dry-run lower a 400B-parameter model on a
+CPU-only container.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | embed | scaled
+    scale: float | None = None    # stddev override
+    dtype: Any = None             # None -> policy param dtype
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"Spec rank mismatch: {self.shape} vs {self.axes}")
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, Spec)
+
+
+def spec_tree_map(fn: Callable[[Spec], Any], specs: Any) -> Any:
+    return jax.tree.map(fn, specs, is_leaf=is_spec)
+
+
+def axes_tree(specs: Any) -> Any:
+    return spec_tree_map(lambda s: s.axes, specs)
+
+
+def shape_dtype_tree(specs: Any, default_dtype: Any = jnp.float32) -> Any:
+    return spec_tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or default_dtype), specs
+    )
+
+
+def param_count(specs: Any) -> int:
+    return int(sum(np.prod(s.shape) for s in jax.tree.leaves(specs, is_leaf=is_spec)))
+
+
+def _init_leaf(spec: Spec, key: jax.Array, default_dtype: Any) -> jax.Array:
+    dtype = spec.dtype or default_dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init in ("normal", "embed", "scaled"):
+        if spec.scale is not None:
+            std = spec.scale
+        elif spec.init == "embed":
+            std = 1.0
+        else:
+            # fan-in scaling on the second-to-last dim (or last for vectors)
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            std = 1.0 / np.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, spec.shape, jnp.float32)).astype(dtype)
+    if spec.init == "arange_neg":  # e.g. A_log init for SSMs
+        n = spec.shape[-1] if spec.shape else 1
+        base = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+        return jnp.broadcast_to(base, spec.shape).astype(dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_params(specs: Any, key: jax.Array, default_dtype: Any = jnp.float32) -> Any:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_leaf(s, k, default_dtype) for s, k in zip(leaves, keys)]
+    )
+
+
+# ---------------------------------------------------------------------------
+# ModelConfig — one dataclass covering every assigned architecture family.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None
+
+    # attention flavour
+    qk_norm: bool = False
+    sliding_window: int | None = None
+    attn_logit_softcap: float | None = None
+    rope_theta: float = 10_000.0
+    pos: str = "rope"           # rope | learned | none
+    max_position: int = 1 << 20
+
+    # block flavour
+    norm: str = "rmsnorm"       # rmsnorm | layernorm
+    act: str = "swiglu"         # swiglu | gelu
+    tie_embeddings: bool = False
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1                # llama4: MoE every 2nd layer (interleaved)
+    capacity_factor: float = 1.25
+    shared_expert: bool = False       # llama4-style shared expert
+    moe_dense_residual: bool = False  # arctic-style parallel dense FFN
+    dense_d_ff: int = 0               # hidden of the dense residual / shared expert
+
+    # SSM / RWKV / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    conv_kernel: int = 4
+    hybrid_attn_every: int = 0        # zamba2: shared attn block every k ssm layers
+
+    # encoder-decoder
+    enc_layers: int = 0
+    enc_seq_len: int = 1024           # encoder memory length (audio frames)
+
+    # multimodal frontends (stubs per brief: inputs are precomputed embeddings)
+    frontend: str | None = None       # None | "audio" | "vision"
+    num_patches: int = 256            # vision tokens prepended to text
+    frontend_dim: int = 0             # raw embedding dim before projector
+
+    # use the Pallas flash-attention kernel for train/prefill attention
+    # (decode + ring caches use the jnp path); interpret-mode on CPU
+    use_flash: bool = False
+    # int8 KV cache (per-token/head absmax scales): halves decode's
+    # dominant HBM term at the cost of ~1e-2 logit error
+    kv_quant: bool = False
+
+    # numerics
+    rms_eps: float = 1e-5
+    # pad embedding/lm-head rows to a multiple so the vocab dim shards over
+    # the model axis (Megatron-style); 1 = paper-faithful exact vocab
+    vocab_pad_multiple: int = 1
+
+    @property
+    def padded_vocab(self) -> int:
+        m = max(self.vocab_pad_multiple, 1)
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.enc_layers > 0
+
+    def reduced(self, **overrides: Any) -> "ModelConfig":
+        """Smoke-test variant: same family/flavours, tiny dims."""
+        d_model = min(self.d_model, 256)
+        n_heads = min(self.n_heads, 4)
+        n_kv = max(1, min(self.n_kv_heads, n_heads, 2))
+        base = dict(
+            name=self.name + "-reduced",
+            n_layers=min(self.n_layers, 2),
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            d_ff=min(self.d_ff, 512),
+            vocab_size=min(self.vocab_size, 512),
+            head_dim=d_model // n_heads,
+            n_experts=min(self.n_experts, 4),
+            top_k=min(self.top_k, 2),
+            dense_d_ff=min(self.dense_d_ff, 256) if self.dense_d_ff else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=min(self.ssm_head_dim, 32),
+            enc_layers=min(self.enc_layers, 2) if self.enc_layers else 0,
+            enc_seq_len=min(self.enc_seq_len, 32),
+            hybrid_attn_every=min(self.hybrid_attn_every, 2) if self.hybrid_attn_every else 0,
+            num_patches=min(self.num_patches, 8),
+            frontend_dim=min(self.frontend_dim, 64) if self.frontend_dim else 0,
+            sliding_window=min(self.sliding_window, 16) if self.sliding_window else None,
+        )
+        base.update(overrides)
+        return dataclasses.replace(self, **base)

@@ -1,0 +1,213 @@
+"""Common neural-net layers: norms, RoPE, attention (GQA / SWA / cross),
+MLPs.  Pure functions over explicit parameter pytrees.
+
+Attention is implemented blockwise over query chunks (full KV per chunk) with
+the chunk body wrapped in ``jax.checkpoint``: this is the memory-efficient
+"flash-style" formulation that keeps peak activation at ``chunk × kv_len``
+instead of ``q_len × kv_len`` — the XLA-level analogue of the paper's
+FlashAttention-2 port, and the reference semantics for the Pallas kernel in
+``repro.kernels``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    normed = x32 * jax.lax.rsqrt(var + eps)
+    return (normed * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    normed = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (normed * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(x: jax.Array, params: dict, kind: str, eps: float) -> jax.Array:
+    if kind == "rmsnorm":
+        return rms_norm(x, params["scale"], eps)
+    return layer_norm(x, params["scale"], params["bias"], eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(head_dim, theta))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]  # broadcast over heads: (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _attend_block(
+    q: jax.Array,           # (B, Cq, Hkv, G, hd)
+    k: jax.Array,           # (B, Skv, Hkv, hd)
+    v: jax.Array,           # (B, Skv, Hkv, hd)
+    q_positions: jax.Array, # (Cq,)
+    kv_positions: jax.Array,# (Skv,)
+    *,
+    causal: bool,
+    sliding_window: int | None,
+    softcap: float | None,
+    scale: float,
+) -> jax.Array:
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    mask = None
+    if causal:
+        # kv_positions < 0 marks not-yet-written ring-buffer slots
+        mask = (kv_positions[None, :] <= q_positions[:, None]) & (kv_positions >= 0)[None, :]
+    if sliding_window is not None:
+        win = q_positions[:, None] - kv_positions[None, :] < sliding_window
+        mask = win if mask is None else (mask & win)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(v.dtype)
+
+
+def attention(
+    q: jax.Array,            # (B, Sq, Hq, hd)
+    k: jax.Array,            # (B, Skv, Hkv, hd)
+    v: jax.Array,            # (B, Skv, Hkv, hd)
+    *,
+    causal: bool = True,
+    q_offset: jax.Array | int = 0,
+    sliding_window: int | None = None,
+    softcap: float | None = None,
+    q_chunk: int = 1024,
+    kv_positions: jax.Array | None = None,
+    use_flash: bool = False,
+) -> jax.Array:
+    """GQA attention, blockwise over query chunks.
+
+    ``q_offset`` is the absolute position of q[:, 0] relative to the KV
+    timeline — pass the cache write position at decode time; causal masking
+    then automatically hides not-yet-written cache slots.  ``kv_positions``
+    overrides the default ``arange(Skv)`` for ring-buffer (SWA) caches;
+    negative entries mark invalid slots.
+    """
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    if (use_flash and kv_positions is None and softcap is None and Sq > 1
+            and isinstance(q_offset, int)):
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.flash_attention(
+            q, k, v, causal=causal, sliding_window=sliding_window,
+            q_offset=q_offset)
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    if kv_positions is None:
+        kv_positions = jnp.arange(Skv)
+    q_positions = jnp.arange(Sq) + q_offset
+
+    block = functools.partial(
+        _attend_block,
+        causal=causal,
+        sliding_window=sliding_window,
+        softcap=softcap,
+        scale=scale,
+    )
+
+    if Sq <= q_chunk or Sq % q_chunk != 0:
+        out = block(qg, k, v, q_positions, kv_positions)
+    else:
+        n_chunks = Sq // q_chunk
+        qs = qg.reshape(B, n_chunks, q_chunk, Hkv, G, hd).transpose(1, 0, 2, 3, 4, 5)
+        ps = q_positions.reshape(n_chunks, q_chunk)
+
+        @jax.checkpoint
+        def body(carry, xs):
+            qc, pc = xs
+            return carry, block(qc, k, v, pc, kv_positions)
+
+        _, outs = jax.lax.scan(body, (), (qs, ps))
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hkv, G, hd)
+    return out.reshape(B, Sq, Hq, hd)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def gelu_mlp(x: jax.Array, w1: jax.Array, w2: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ w1, approximate=True) @ w2
+
+
+def mlp(x: jax.Array, params: dict, act: str) -> jax.Array:
+    if act == "swiglu":
+        return swiglu(x, params["w1"], params["w3"], params["w2"])
+    return gelu_mlp(x, params["w1"], params["w2"])
+
+
+# ---------------------------------------------------------------------------
+# KV cache helpers
+# ---------------------------------------------------------------------------
+
+def cache_update(cache_k: jax.Array, cache_v: jax.Array, k: jax.Array, v: jax.Array,
+                 pos: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Write (B, 1, Hkv, hd) new KV at position ``pos`` of (B, S, Hkv, hd)."""
+    idx = (0, pos.astype(jnp.int32), 0, 0)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), idx)
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), idx)
+    return cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantization (per-token, per-head absmax scales)
+# ---------------------------------------------------------------------------
+
+def kv_quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (..., hd) -> (int8 values, f32 scale over the trailing dim)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def kv_dequantize(q: jax.Array, scale: jax.Array, dtype: Any) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)).astype(dtype)

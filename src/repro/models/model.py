@@ -1,0 +1,612 @@
+"""Top-level Model: composes blocks per architecture family and exposes
+
+  * ``param_specs()``    — declarative tree (shapes/axes/init) — no allocation
+  * ``init(key)``        — real parameters
+  * ``loss(params, batch)``      — training objective (chunked CE + MoE aux)
+  * ``prefill(params, batch)``   — full-sequence forward that builds a cache
+  * ``decode_step(params, cache, batch)`` — one-token serving step
+  * ``cache_specs(batch)``       — declarative cache tree for the dry-run
+
+Families: dense | moe | hybrid (zamba2) | rwkv | encdec (seamless) | vlm.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import blocks, layers, moe, rwkv, ssm
+from repro.models.common import (
+    ModelConfig, Spec, axes_tree, init_params, is_spec, param_count,
+    shape_dtype_tree, spec_tree_map,
+)
+
+MOE_AUX_COEF = 0.01
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def grad_cast(x, dtype):
+    """Identity forward; casts the cotangent to ``dtype`` on the way back.
+
+    Without this, the f32 loss cotangent infects the entire backward layer
+    scan (f32 x bf16 promotes to f32): every saved-residual
+    dynamic-update-slice becomes a whole-stack f32<->bf16 convert round-trip
+    in the lowered HLO (measured: 11.2 TB/device of the qwen3-32b train_4k
+    traffic; see EXPERIMENTS.md §Perf).  fp32 gradient *accumulation* across
+    microbatches is unaffected (it happens outside the model)."""
+    return x
+
+
+def _grad_cast_fwd(x, dtype):
+    return x, None
+
+
+def _grad_cast_bwd(dtype, _, g):
+    return (g.astype(dtype),)
+
+
+grad_cast.defvjp(_grad_cast_fwd, _grad_cast_bwd)
+
+
+def stack_specs(tree: Any, n: int) -> Any:
+    return spec_tree_map(
+        lambda s: dataclasses.replace(s, shape=(n,) + s.shape, axes=("layers",) + s.axes),
+        tree,
+    )
+
+
+def _layer_specs(cfg: ModelConfig) -> dict:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return {"attn": blocks.attn_specs(cfg), "mlp": blocks.mlp_specs(cfg)}
+    if fam == "moe":
+        unit = {"attn": blocks.attn_specs(cfg), "moe": moe.moe_specs(cfg)}
+        if cfg.moe_every > 1:
+            dense = {"attn": blocks.attn_specs(cfg),
+                     "mlp": blocks.mlp_specs(cfg, cfg.dense_d_ff or cfg.d_ff)}
+            unit["dense"] = stack_specs(dense, cfg.moe_every - 1)
+        return unit
+    if fam == "hybrid":
+        return ssm.mamba_specs(cfg)
+    if fam == "rwkv":
+        return rwkv.rwkv_specs(cfg)
+    if fam == "encdec":
+        return {
+            "attn": blocks.attn_specs(cfg),
+            "cross": blocks.attn_specs(cfg, cross=True),
+            "mlp": blocks.mlp_specs(cfg),
+        }
+    raise ValueError(f"unknown family {fam}")
+
+
+def _n_super(cfg: ModelConfig) -> int:
+    per = cfg.hybrid_attn_every or cfg.n_layers
+    assert cfg.n_layers % per == 0, (cfg.n_layers, per)
+    return cfg.n_layers // per
+
+
+def _n_stack(cfg: ModelConfig) -> int:
+    """Number of stacked scan units ("layers" leading dim)."""
+    if cfg.family == "moe" and cfg.moe_every > 1:
+        assert cfg.n_layers % cfg.moe_every == 0, (cfg.n_layers, cfg.moe_every)
+        return cfg.n_layers // cfg.moe_every
+    return cfg.n_layers
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, compute_dtype: Any = jnp.bfloat16,
+                 q_chunk: int = 1024):
+        self.cfg = cfg
+        self.compute_dtype = compute_dtype
+        self.q_chunk = q_chunk
+
+    # ------------------------------------------------------------------
+    # Specs / init
+    # ------------------------------------------------------------------
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        d, V = cfg.d_model, cfg.padded_vocab
+        specs: dict[str, Any] = {
+            "embed": Spec((V, d), ("vocab", "embed"), scale=0.02),
+            "final_norm": blocks.norm_spec(d, cfg.norm),
+            "layers": stack_specs(_layer_specs(cfg), _n_stack(cfg)),
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = Spec((d, V), ("embed", "vocab"), scale=0.02)
+        if cfg.family == "hybrid":
+            specs["shared"] = {
+                "attn": blocks.attn_specs(cfg),
+                "mlp": blocks.mlp_specs(cfg),
+            }
+        if cfg.family == "encdec":
+            enc_layer = {"attn": blocks.attn_specs(cfg), "mlp": blocks.mlp_specs(cfg)}
+            specs["encoder"] = {
+                "in_proj": Spec((cfg.frontend_dim, d), (None, "embed")),
+                "layers": stack_specs(enc_layer, cfg.enc_layers),
+                "final_norm": blocks.norm_spec(d, cfg.norm),
+            }
+        if cfg.family == "vlm":
+            specs["proj"] = Spec((cfg.frontend_dim, d), (None, "embed"))
+        return specs
+
+    def param_axes(self) -> Any:
+        return axes_tree(self.param_specs())
+
+    def param_shapes(self, dtype: Any = jnp.float32) -> Any:
+        return shape_dtype_tree(self.param_specs(), dtype)
+
+    def init(self, key: jax.Array, dtype: Any = jnp.float32) -> Any:
+        return init_params(self.param_specs(), key, dtype)
+
+    def n_params(self) -> int:
+        return param_count(self.param_specs())
+
+    # ------------------------------------------------------------------
+    # Embedding / unembedding
+    # ------------------------------------------------------------------
+    def _embed(self, params: dict, batch: dict) -> jax.Array:
+        cfg = self.cfg
+        tok = jnp.take(params["embed"], batch["tokens"], axis=0)
+        tok = tok.astype(self.compute_dtype)
+        if cfg.family == "vlm":
+            patches = (batch["patches"].astype(self.compute_dtype)
+                       @ params["proj"].astype(self.compute_dtype))
+            tok = jnp.concatenate([patches, tok], axis=1)
+        return tok
+
+    def _unembed_matrix(self, params: dict) -> jax.Array:
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    # ------------------------------------------------------------------
+    # Stacks
+    # ------------------------------------------------------------------
+    def _run_stack(self, stacked: Any, x: jax.Array, *, causal: bool = True,
+                   memory: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        fam = cfg.family
+
+        def body(carry, lp):
+            x, aux = carry
+            if fam in ("dense", "vlm") or (fam == "encdec" and memory is None):
+                x = blocks.self_attn_block(lp["attn"], x, cfg, causal=causal,
+                                           q_chunk=self.q_chunk)
+                x = blocks.mlp_block(lp["mlp"], x, cfg)
+            elif fam == "moe":
+                if cfg.moe_every > 1:
+                    def dense_body(c, dlp):
+                        c = blocks.self_attn_block(dlp["attn"], c, cfg,
+                                                   causal=causal,
+                                                   q_chunk=self.q_chunk)
+                        return blocks.mlp_block(dlp["mlp"], c, cfg), None
+                    x, _ = jax.lax.scan(dense_body, x, lp["dense"])
+                x = blocks.self_attn_block(lp["attn"], x, cfg, causal=causal,
+                                           q_chunk=self.q_chunk)
+                x, a = moe.moe_block(lp["moe"], x, cfg)
+                aux = aux + a
+            elif fam == "encdec":
+                x = blocks.self_attn_block(lp["attn"], x, cfg, causal=True,
+                                           q_chunk=self.q_chunk)
+                x = blocks.cross_attn_block(lp["cross"], x, memory, cfg)
+                x = blocks.mlp_block(lp["mlp"], x, cfg)
+            elif fam == "rwkv":
+                x = rwkv.rwkv_block(lp, x, cfg)
+            elif fam == "hybrid":
+                x = ssm.mamba_block(lp, x, cfg)
+            else:
+                raise ValueError(fam)
+            return (x, aux), None
+
+        (x, aux), _ = jax.lax.scan(jax.checkpoint(body), (x, jnp.float32(0.0)), stacked)
+        return x, aux
+
+    def _run_hybrid(self, params: dict, x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        n_super = _n_super(cfg)
+        per = cfg.n_layers // n_super
+        grouped = jax.tree.map(
+            lambda a: a.reshape(n_super, per, *a.shape[1:]), params["layers"])
+        shared = params["shared"]
+
+        def super_body(x, lp_group):
+            def inner(x2, lp):
+                return ssm.mamba_block(lp, x2, cfg), None
+            x, _ = jax.lax.scan(inner, x, lp_group)
+            x = blocks.self_attn_block(shared["attn"], x, cfg, causal=True,
+                                       q_chunk=self.q_chunk)
+            x = blocks.mlp_block(shared["mlp"], x, cfg)
+            return x, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(super_body), x, grouped)
+        return x
+
+    def encode(self, params: dict, frames: jax.Array) -> jax.Array:
+        """Audio/encoder stack: frame embeddings (B, T, fd) -> memory (B, T, d)."""
+        cfg = self.cfg
+        enc = params["encoder"]
+        x = frames.astype(self.compute_dtype) @ enc["in_proj"].astype(self.compute_dtype)
+
+        def body(carry, lp):
+            x, _ = carry
+            x = blocks.self_attn_block(lp["attn"], x, cfg, causal=False,
+                                       q_chunk=self.q_chunk)
+            x = blocks.mlp_block(lp["mlp"], x, cfg)
+            return (x, jnp.float32(0.0)), None
+
+        (x, _), _ = jax.lax.scan(jax.checkpoint(body), (x, jnp.float32(0.0)),
+                                 enc["layers"])
+        return layers.apply_norm(x, enc["final_norm"], cfg.norm, cfg.rms_eps)
+
+    # ------------------------------------------------------------------
+    # Forward / loss
+    # ------------------------------------------------------------------
+    def hidden_states(self, params: dict, batch: dict) -> tuple[jax.Array, jax.Array]:
+        """Returns (final-normed hidden states, moe aux loss)."""
+        cfg = self.cfg
+        cparams = _cast_floating(params, self.compute_dtype,
+                                 skip=("state",))  # weights in compute dtype
+        x = self._embed(cparams, batch)
+        aux = jnp.float32(0.0)
+        if cfg.family == "hybrid":
+            x = self._run_hybrid(cparams, x)
+        elif cfg.family == "encdec":
+            memory = self.encode(cparams, batch["frames"])
+            x, aux = self._run_stack(cparams["layers"], x, memory=memory)
+        else:
+            x, aux = self._run_stack(cparams["layers"], x)
+        x = layers.apply_norm(x, cparams["final_norm"], cfg.norm, cfg.rms_eps)
+        return x, aux
+
+    def logits(self, params: dict, batch: dict) -> jax.Array:
+        h, _ = self.hidden_states(params, batch)
+        W = self._unembed_matrix(params).astype(self.compute_dtype)
+        return (h @ W).astype(jnp.float32)[..., :self.cfg.vocab_size]
+
+    def loss(self, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        h, aux = self.hidden_states(params, batch)
+        # keep the backward signal through the stack in compute dtype
+        h = grad_cast(h, self.compute_dtype)
+        if cfg.family == "vlm":
+            h = h[:, cfg.num_patches:, :]
+        labels = batch["tokens"][:, 1:]
+        h = h[:, :-1, :]
+        mask = batch.get("loss_mask")
+        mask = jnp.ones_like(labels, jnp.float32) if mask is None else mask[:, 1:]
+        W = self._unembed_matrix(params).astype(self.compute_dtype)
+        ce = _chunked_cross_entropy(h, W, labels, mask,
+                                    valid_vocab=self.cfg.vocab_size)
+        total = ce + MOE_AUX_COEF * aux / max(cfg.n_layers, 1)
+        return total, {"ce": ce, "moe_aux": aux}
+
+    # ------------------------------------------------------------------
+    # Caches
+    # ------------------------------------------------------------------
+    def _attn_cache_len(self, cache_len: int) -> int:
+        if self.cfg.sliding_window is not None:
+            return min(cache_len, self.cfg.sliding_window)
+        return cache_len
+
+    def cache_specs(self, batch: int, cache_len: int) -> dict:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        clen = self._attn_cache_len(cache_len)
+
+        def kv():
+            dt = jnp.int8 if cfg.kv_quant else self.compute_dtype
+            spec = {
+                "k": Spec((batch, clen, cfg.n_kv_heads, hd),
+                          ("cache_batch", "cache_seq", "cache_heads", "head_dim"),
+                          init="zeros", dtype=dt),
+                "v": Spec((batch, clen, cfg.n_kv_heads, hd),
+                          ("cache_batch", "cache_seq", "cache_heads", "head_dim"),
+                          init="zeros", dtype=dt),
+            }
+            if cfg.kv_quant:
+                spec["k_scale"] = Spec((batch, clen, cfg.n_kv_heads),
+                                       ("cache_batch", "cache_seq", "cache_heads"),
+                                       init="zeros", dtype=jnp.float32)
+                spec["v_scale"] = Spec((batch, clen, cfg.n_kv_heads),
+                                       ("cache_batch", "cache_seq", "cache_heads"),
+                                       init="zeros", dtype=jnp.float32)
+            return spec
+        specs: dict[str, Any] = {"pos": Spec((), (), init="zeros", dtype=jnp.int32)}
+        if cfg.family == "moe" and cfg.moe_every > 1:
+            unit = {"moe_kv": kv(), "dense": stack_specs(kv(), cfg.moe_every - 1)}
+            specs["layers"] = stack_specs(unit, _n_stack(cfg))
+        elif cfg.family in ("dense", "vlm", "moe", "encdec"):
+            specs["layers"] = stack_specs(kv(), cfg.n_layers)
+        elif cfg.family == "rwkv":
+            specs["layers"] = stack_specs(
+                rwkv.rwkv_cache_specs(cfg, batch, self.compute_dtype), cfg.n_layers)
+        elif cfg.family == "hybrid":
+            specs["layers"] = stack_specs(
+                ssm.mamba_cache_specs(cfg, batch, self.compute_dtype), cfg.n_layers)
+            specs["shared"] = stack_specs(kv(), _n_super(cfg))
+        else:
+            raise ValueError(cfg.family)
+        return specs
+
+    def init_cache(self, batch: int, cache_len: int) -> dict:
+        return init_params(self.cache_specs(batch, cache_len), jax.random.PRNGKey(0))
+
+    # ------------------------------------------------------------------
+    # Prefill: full-sequence forward that fills the cache
+    # ------------------------------------------------------------------
+    def prefill(self, params: dict, batch: dict, cache_len: int) -> tuple[jax.Array, dict]:
+        """Returns (last-token logits (B, V), cache at pos=S)."""
+        cfg = self.cfg
+        cparams = _cast_floating(params, self.compute_dtype)
+        x = self._embed(cparams, batch)
+        B, S = x.shape[:2]
+        clen = self._attn_cache_len(cache_len)
+        cache: dict[str, Any] = {"pos": jnp.int32(S)}
+
+        if cfg.family == "moe" and cfg.moe_every > 1:
+            def body(carry, lp):
+                x, aux = carry
+
+                def dense_body(c, dlp):
+                    c, k, v = blocks.self_attn_block(
+                        dlp["attn"], c, cfg, causal=True,
+                        q_chunk=self.q_chunk, return_kv=True)
+                    c = blocks.mlp_block(dlp["mlp"], c, cfg)
+                    return c, _kv_into_cache(k, v, clen, cfg.kv_quant)
+
+                x, dense_kvs = jax.lax.scan(dense_body, x, lp["dense"])
+                x, k, v = blocks.self_attn_block(lp["attn"], x, cfg, causal=True,
+                                                 q_chunk=self.q_chunk, return_kv=True)
+                x, a = moe.moe_block(lp["moe"], x, cfg)
+                return (x, aux + a), {"moe_kv": _kv_into_cache(k, v, clen, cfg.kv_quant),
+                                      "dense": dense_kvs}
+
+            (x, _), kvs = jax.lax.scan(jax.checkpoint(body), (x, jnp.float32(0.0)),
+                                       cparams["layers"])
+            cache["layers"] = kvs
+        elif cfg.family in ("dense", "vlm", "moe"):
+            def body(carry, lp):
+                x, aux = carry
+                x, k, v = blocks.self_attn_block(lp["attn"], x, cfg, causal=True,
+                                                 q_chunk=self.q_chunk, return_kv=True)
+                if cfg.family == "moe":
+                    x, a = moe.moe_block(lp["moe"], x, cfg)
+                    aux = aux + a
+                else:
+                    x = blocks.mlp_block(lp["mlp"], x, cfg)
+                return (x, aux), _kv_into_cache(k, v, clen, cfg.kv_quant)
+
+            (x, _), kvs = jax.lax.scan(jax.checkpoint(body), (x, jnp.float32(0.0)),
+                                       cparams["layers"])
+            cache["layers"] = kvs
+        elif cfg.family == "encdec":
+            memory = self.encode(cparams, batch["frames"])
+
+            def body(carry, lp):
+                x, _ = carry
+                x, k, v = blocks.self_attn_block(lp["attn"], x, cfg, causal=True,
+                                                 q_chunk=self.q_chunk, return_kv=True)
+                x = blocks.cross_attn_block(lp["cross"], x, memory, cfg)
+                x = blocks.mlp_block(lp["mlp"], x, cfg)
+                return (x, jnp.float32(0.0)), _kv_into_cache(k, v, clen, cfg.kv_quant)
+
+            (x, _), kvs = jax.lax.scan(jax.checkpoint(body), (x, jnp.float32(0.0)),
+                                       cparams["layers"])
+            cache["layers"] = kvs
+        elif cfg.family == "rwkv":
+            def body(x, lp):
+                x, c = rwkv.rwkv_prefill(lp, x, cfg)
+                return x, c
+            x, cs = jax.lax.scan(jax.checkpoint(body), x, cparams["layers"])
+            cache["layers"] = cs
+        elif cfg.family == "hybrid":
+            n_super = _n_super(cfg)
+            per = cfg.n_layers // n_super
+            grouped = jax.tree.map(
+                lambda a: a.reshape(n_super, per, *a.shape[1:]), cparams["layers"])
+            shared = cparams["shared"]
+
+            def super_body(x, lp_group):
+                def inner(x2, lp):
+                    return ssm.mamba_prefill(lp, x2, cfg)
+                x, mcs = jax.lax.scan(inner, x, lp_group)
+                x, k, v = blocks.self_attn_block(shared["attn"], x, cfg, causal=True,
+                                                 q_chunk=self.q_chunk, return_kv=True)
+                x = blocks.mlp_block(shared["mlp"], x, cfg)
+                return x, (mcs, _kv_into_cache(k, v, clen, cfg.kv_quant))
+
+            x, (mcs, kvs) = jax.lax.scan(jax.checkpoint(super_body), x, grouped)
+            cache["layers"] = jax.tree.map(
+                lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), mcs)
+            cache["shared"] = kvs
+        else:
+            raise ValueError(cfg.family)
+
+        x = layers.apply_norm(x, cparams["final_norm"], cfg.norm, cfg.rms_eps)
+        W = self._unembed_matrix(cparams)
+        logits = (x[:, -1, :] @ W).astype(jnp.float32)[..., :cfg.vocab_size]
+        return logits, cache
+
+    # ------------------------------------------------------------------
+    # Decode
+    # ------------------------------------------------------------------
+    def decode_step(self, params: dict, cache: dict, batch: dict) -> tuple[jax.Array, dict]:
+        """One serving step: batch = {"token": (B, 1)} (+ "memory" for encdec).
+
+        Returns (logits (B, V), updated cache)."""
+        cfg = self.cfg
+        cparams = _cast_floating(params, self.compute_dtype)
+        pos = cache["pos"]
+        x = jnp.take(cparams["embed"], batch["token"], axis=0)
+        if cfg.family == "vlm":
+            pos_t = pos  # positions already include patch offset from prefill
+        else:
+            pos_t = pos
+
+        new_cache: dict[str, Any] = {"pos": pos + 1}
+        if cfg.family == "moe" and cfg.moe_every > 1:
+            def body(x, xs):
+                lp, cl = xs
+
+                def dense_body(c, ys):
+                    dlp, dcl = ys
+                    c, nkv = blocks.self_attn_decode(dlp["attn"], c, dcl, pos_t, cfg)
+                    return blocks.mlp_block(dlp["mlp"], c, cfg), nkv
+
+                x, ndense = jax.lax.scan(dense_body, x, (lp["dense"], cl["dense"]))
+                x, nkv = blocks.self_attn_decode(lp["attn"], x, cl["moe_kv"], pos_t, cfg)
+                x, _ = moe.moe_block(lp["moe"], x, cfg)
+                return x, {"moe_kv": nkv, "dense": ndense}
+            x, ncs = jax.lax.scan(body, x, (cparams["layers"], cache["layers"]))
+            new_cache["layers"] = ncs
+        elif cfg.family in ("dense", "vlm", "moe"):
+            def body(x, xs):
+                lp, cl = xs
+                x, nc = _decode_layer(lp, x, cl, pos_t, cfg, self)
+                return x, nc
+            x, ncs = jax.lax.scan(body, x, (cparams["layers"], cache["layers"]))
+            new_cache["layers"] = ncs
+        elif cfg.family == "encdec":
+            memory = batch["memory"].astype(self.compute_dtype)
+
+            def body(x, xs):
+                lp, cl = xs
+                x, nc = blocks.self_attn_decode(lp["attn"], x, cl, pos_t, cfg)
+                x = blocks.cross_attn_block(lp["cross"], x, memory, cfg)
+                x = blocks.mlp_block(lp["mlp"], x, cfg)
+                return x, nc
+            x, ncs = jax.lax.scan(body, x, (cparams["layers"], cache["layers"]))
+            new_cache["layers"] = ncs
+        elif cfg.family == "rwkv":
+            def body(x, xs):
+                lp, cl = xs
+                return rwkv.rwkv_decode(lp, x, cl, cfg)
+            x, ncs = jax.lax.scan(body, x, (cparams["layers"], cache["layers"]))
+            new_cache["layers"] = ncs
+        elif cfg.family == "hybrid":
+            n_super = _n_super(cfg)
+            per = cfg.n_layers // n_super
+            grouped = jax.tree.map(
+                lambda a: a.reshape(n_super, per, *a.shape[1:]), cparams["layers"])
+            gcache = jax.tree.map(
+                lambda a: a.reshape(n_super, per, *a.shape[1:]), cache["layers"])
+            shared = cparams["shared"]
+
+            def super_body(x, xs):
+                lp_group, mc_group, skv = xs
+
+                def inner(x2, ys):
+                    lp, mc = ys
+                    return ssm.mamba_decode(lp, x2, mc, cfg)
+                x, nmc = jax.lax.scan(inner, x, (lp_group, mc_group))
+                x, nkv = blocks.self_attn_decode(shared["attn"], x, skv, pos_t, cfg)
+                x = blocks.mlp_block(shared["mlp"], x, cfg)
+                return x, (nmc, nkv)
+
+            x, (nmc, nkv) = jax.lax.scan(super_body, x,
+                                         (grouped, gcache, cache["shared"]))
+            new_cache["layers"] = jax.tree.map(
+                lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), nmc)
+            new_cache["shared"] = nkv
+        else:
+            raise ValueError(cfg.family)
+
+        x = layers.apply_norm(x, cparams["final_norm"], cfg.norm, cfg.rms_eps)
+        W = self._unembed_matrix(cparams)
+        logits = (x[:, 0, :] @ W).astype(jnp.float32)[..., :cfg.vocab_size]
+        return logits, new_cache
+
+
+def _decode_layer(lp: dict, x: jax.Array, cl: dict, pos: jax.Array,
+                  cfg: ModelConfig, model: Model):
+    x, nc = blocks.self_attn_decode(lp["attn"], x, cl, pos, cfg)
+    if cfg.family == "moe":
+        x, _ = moe.moe_block(lp["moe"], x, cfg)
+    else:
+        x = blocks.mlp_block(lp["mlp"], x, cfg)
+    return x, nc
+
+
+def _ring_place(x: jax.Array, clen: int) -> jax.Array:
+    """Place full-sequence entries (B, S, ...) into a length-``clen`` ring,
+    slot(t) = t % clen (matches decode-time writes)."""
+    B, S = x.shape[:2]
+    if S == clen:
+        return x
+    if S < clen:
+        pad = [(0, 0), (0, clen - S)] + [(0, 0)] * (x.ndim - 2)
+        return jnp.pad(x, pad)
+    slots = np.arange(S - clen, S) % clen
+    out = jnp.zeros((B, clen, *x.shape[2:]), x.dtype)
+    return out.at[:, slots].set(x[:, S - clen:])
+
+
+def _kv_into_cache(k: jax.Array, v: jax.Array, clen: int, quant: bool = False):
+    if quant:
+        kq, ks = layers.kv_quantize(k)
+        vq, vs = layers.kv_quantize(v)
+        return {"k": _ring_place(kq, clen), "v": _ring_place(vq, clen),
+                "k_scale": _ring_place(ks, clen), "v_scale": _ring_place(vs, clen)}
+    return {"k": _ring_place(k, clen), "v": _ring_place(v, clen)}
+
+
+def _cast_floating(tree: Any, dtype: Any, skip: tuple = ()) -> Any:
+    return jax.tree.map(
+        lambda x: x.astype(dtype)
+        if (hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)) else x,
+        tree,
+    )
+
+
+def _chunked_cross_entropy(h: jax.Array, W: jax.Array, labels: jax.Array,
+                           mask: jax.Array, target_chunk: int = 8192,
+                           valid_vocab: int | None = None) -> jax.Array:
+    """CE over (B, S, d) hidden vs (d, V) unembedding, chunked over tokens so
+    the full (N, V) logits tensor is never materialized (vocab up to 256k)."""
+    B, S, d = h.shape
+    N = B * S
+    hf = h.reshape(N, d)
+    yf = labels.reshape(N)
+    mf = mask.reshape(N)
+    chunk = N
+    for c in (target_chunk, 4096, 2048, 1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if c <= N and N % c == 0:
+            chunk = c
+            break
+    n_chunks = N // chunk
+
+    Vp = W.shape[-1]
+    pad_mask = (jnp.arange(Vp) >= valid_vocab) if (valid_vocab is not None
+                                                   and valid_vocab < Vp) else None
+
+    @jax.checkpoint
+    def body(carry, xs):
+        loss_sum, count = carry
+        hc, yc, mc = xs
+        logits = (hc @ W).astype(jnp.float32)
+        if pad_mask is not None:
+            logits = jnp.where(pad_mask[None, :], -1e30, logits)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, yc[:, None], axis=-1)[:, 0]
+        loss_sum = loss_sum + jnp.sum((logz - ll) * mc)
+        count = count + jnp.sum(mc)
+        return (loss_sum, count), None
+
+    xs = (hf.reshape(n_chunks, chunk, d), yf.reshape(n_chunks, chunk),
+          mf.reshape(n_chunks, chunk))
+    (loss_sum, count), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), xs)
+    return loss_sum / jnp.maximum(count, 1.0)
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_model(cfg: ModelConfig, dtype_name: str, q_chunk: int) -> Model:
+    return Model(cfg, jnp.dtype(dtype_name), q_chunk)
+
+
+def build_model(cfg: ModelConfig, compute_dtype: Any = jnp.bfloat16,
+                q_chunk: int = 1024) -> Model:
+    return _cached_model(cfg, jnp.dtype(compute_dtype).name, q_chunk)

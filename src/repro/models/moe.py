@@ -1,0 +1,147 @@
+"""Mixture-of-Experts FFN with grouped, capacity-bounded dispatch.
+
+Tokens are reshaped into groups of ~4096 (the group dim inherits the batch's
+``data`` sharding) and routed with *gather/scatter* dispatch instead of the
+classic GShard one-hot einsum: the (g, E, C) one-hot tensor and its
+O(tokens * E * C * d) dispatch matmuls would dominate both memory and FLOPs
+at million-token batches.  Slot-to-token index maps keep dispatch cost
+proportional to tokens — the TPU-native formulation (DESIGN.md §2).
+
+Expert weights are sharded over the ``data`` axis (expert parallelism);
+under GSPMD the grouped dispatch lowers to the all-to-all exchange the
+paper's Megatron-DeepSpeed MoE performs.
+
+Supports:
+  * top-1 routing + shared expert                    (llama4-maverick)
+  * top-2 routing + parallel dense residual branch   (arctic)
+  * switch-style load-balance auxiliary loss
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.blocks import mlp_specs, norm_spec
+from repro.models.common import ModelConfig, Spec
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    spec: dict[str, Any] = {
+        "ln": norm_spec(d, cfg.norm),
+        "router": Spec((d, E), ("embed", None), scale=0.02),
+        "w1": Spec((E, d, ff), ("experts", "embed", "expert_mlp")),
+        "w2": Spec((E, ff, d), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.act == "swiglu":
+        spec["w3"] = Spec((E, d, ff), ("experts", "embed", "expert_mlp"))
+    if cfg.shared_expert:
+        spec["shared"] = mlp_specs(cfg, d_ff=cfg.dense_d_ff or ff)
+    if cfg.moe_dense_residual:
+        spec["dense"] = mlp_specs(cfg, d_ff=cfg.dense_d_ff or ff)
+    return spec
+
+
+def group_shape(n_tokens: int, target: int = 4096) -> tuple[int, int]:
+    """(n_groups, group_size); groups inherit the data sharding."""
+    if n_tokens <= 2 * target:
+        return 1, n_tokens
+    g = target
+    while n_tokens % g != 0:
+        g -= 1
+    return n_tokens // g, g
+
+
+def moe_capacity(group_size: int, cfg: ModelConfig) -> int:
+    cap = int(np.ceil(cfg.capacity_factor * group_size * max(cfg.top_k, 1)
+                      / cfg.n_experts))
+    return max(cap, 1)
+
+
+def _route(gates: jax.Array, top_k: int, capacity: int):
+    """gates: (G, g, E) fp32 softmax probs.
+
+    Returns per-k (expert_id, slot, keep, weight) of shape (G, g) each, the
+    slot->token index map (G, E*C) with a validity mask, and the aux loss.
+    """
+    G, g, E = gates.shape
+    C = capacity
+    topk_vals, topk_idx = jax.lax.top_k(gates, top_k)          # (G, g, K)
+    topk_vals = topk_vals / jnp.maximum(topk_vals.sum(-1, keepdims=True), 1e-9)
+
+    counts = jnp.zeros((G, E), jnp.int32)
+    assignments = []
+    for k in range(top_k):
+        e_k = topk_idx[:, :, k]                                # (G, g)
+        onehot = jax.nn.one_hot(e_k, E, dtype=jnp.int32)       # (G, g, E)
+        pos = jnp.cumsum(onehot, axis=1) - 1 + counts[:, None, :]
+        p_k = jnp.take_along_axis(pos, e_k[..., None], axis=-1)[..., 0]
+        keep = p_k < C
+        assignments.append((e_k, p_k, keep, topk_vals[:, :, k]))
+        counts = counts + onehot.sum(axis=1)
+
+    # slot -> token map (scatter; dropped tokens go to the drop bucket)
+    EC = E * C
+    slot_to_token = jnp.zeros((G, EC), jnp.int32)
+    slot_valid = jnp.zeros((G, EC), jnp.bool_)
+    rows = jnp.arange(G)[:, None]
+    token_ids = jnp.broadcast_to(jnp.arange(g)[None, :], (G, g))
+    for e_k, p_k, keep, _ in assignments:
+        s = jnp.where(keep, e_k * C + p_k, EC)                 # EC = dropped
+        slot_to_token = slot_to_token.at[rows, s].set(token_ids, mode="drop")
+        slot_valid = slot_valid.at[rows, s].set(True, mode="drop")
+
+    # switch load-balance loss: E * sum_e f_e p_e  (mean over groups)
+    top1 = jax.nn.one_hot(topk_idx[:, :, 0], E, dtype=jnp.float32)
+    aux = E * jnp.mean(jnp.sum(top1.mean(axis=1) * gates.mean(axis=1), axis=-1))
+    return assignments, slot_to_token, slot_valid, aux
+
+
+def moe_block(params: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    B, S, d = x.shape
+    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps)
+    N = B * S
+    G, g = group_shape(N)
+    C = moe_capacity(g, cfg)
+    E = cfg.n_experts
+    xg = h.reshape(G, g, d)
+
+    logits = (xg @ params["router"]).astype(jnp.float32)       # (G, g, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    assignments, slot_to_token, slot_valid, aux = _route(gates, cfg.top_k, C)
+
+    # dispatch: gather token activations into (G, E*C, d) expert slots
+    expert_in = jnp.take_along_axis(xg, slot_to_token[..., None], axis=1)
+    expert_in = jnp.where(slot_valid[..., None], expert_in, 0)
+    expert_in = expert_in.reshape(G, E, C, d)
+
+    if cfg.act == "swiglu":
+        hmid = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, params["w1"]))
+        hmid = hmid * jnp.einsum("gecd,edf->gecf", expert_in, params["w3"])
+    else:
+        hmid = jax.nn.gelu(
+            jnp.einsum("gecd,edf->gecf", expert_in, params["w1"]),
+            approximate=True)
+    expert_out = jnp.einsum("gecf,efd->gecd", hmid, params["w2"])
+    expert_out = expert_out.reshape(G, E * C, d)
+
+    # combine: gather each token's expert outputs back, weighted
+    out = jnp.zeros((G, g, d), x.dtype)
+    for e_k, p_k, keep, w_k in assignments:
+        # dropped tokens have p_k >= C: clamp the gather (their weight is 0)
+        s = jnp.where(keep, e_k * C + p_k, 0)                  # (G, g)
+        vals = jnp.take_along_axis(expert_out, s[..., None], axis=1)
+        wk = (w_k * keep).astype(x.dtype)
+        out = out + vals * wk[..., None]
+
+    out = out.reshape(B, S, d)
+    if cfg.shared_expert:
+        out = out + layers.mlp(h, params["shared"], cfg.act)
+    if cfg.moe_dense_residual:
+        out = out + layers.mlp(h, params["dense"], cfg.act)
+    return x + out, aux.astype(jnp.float32)

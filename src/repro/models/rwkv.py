@@ -1,0 +1,222 @@
+"""RWKV-6 ("Finch") blocks: time-mix with data-dependent decay + channel-mix.
+
+Attention-free: the recurrent state is (H, K, V) per layer, O(1) in sequence
+length — this is what carries the 500k-token decode shape.  Training/prefill
+use the chunked-parallel wkv formulation (log-space per-channel decays,
+intra-chunk matmul + inter-chunk carry — the linear-attention analogue of the
+SSD chunk scan; exact vs the sequential recurrence in tests); decode is the
+O(1) single-step form.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.blocks import norm_spec
+from repro.models.common import ModelConfig, Spec
+
+LORA_RANK = 64
+
+
+def rwkv_head_dim(cfg: ModelConfig) -> int:
+    return cfg.resolved_head_dim
+
+
+def n_rwkv_heads(cfg: ModelConfig) -> int:
+    hd = rwkv_head_dim(cfg)
+    assert cfg.d_model % hd == 0
+    return cfg.d_model // hd
+
+
+def rwkv_specs(cfg: ModelConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    r = min(LORA_RANK, d)
+    tm = {
+        "ln": norm_spec(d, cfg.norm),
+        "mu_r": Spec((d,), ("embed",), init="zeros"),
+        "mu_k": Spec((d,), ("embed",), init="zeros"),
+        "mu_v": Spec((d,), ("embed",), init="zeros"),
+        "mu_w": Spec((d,), ("embed",), init="zeros"),
+        "mu_g": Spec((d,), ("embed",), init="zeros"),
+        "wr": Spec((d, d), ("embed", "heads")),
+        "wk": Spec((d, d), ("embed", "heads")),
+        "wv": Spec((d, d), ("embed", "heads")),
+        "wg": Spec((d, d), ("embed", "heads")),
+        "wo": Spec((d, d), ("heads", "embed")),
+        "w0": Spec((d,), ("heads",), init="zeros"),
+        "w_lora_a": Spec((d, r), ("embed", None), scale=0.01),
+        "w_lora_b": Spec((r, d), (None, "heads"), scale=0.01),
+        "u": Spec((d,), ("heads",), init="zeros"),
+        "ln_x": Spec((d,), ("heads",), init="ones"),
+    }
+    cm = {
+        "ln": norm_spec(d, cfg.norm),
+        "mu_r": Spec((d,), ("embed",), init="zeros"),
+        "mu_k": Spec((d,), ("embed",), init="zeros"),
+        "wr": Spec((d, d), ("embed", "heads")),
+        "wk": Spec((d, ff), ("embed", "mlp")),
+        "wv": Spec((ff, d), ("mlp", "embed")),
+    }
+    return {"tm": tm, "cm": cm}
+
+
+def _lerp(x: jax.Array, x_prev: jax.Array, mu: jax.Array) -> jax.Array:
+    return x + (x_prev - x) * mu
+
+
+def _decay(p: dict, xw: jax.Array) -> jax.Array:
+    """Data-dependent per-channel decay in (0, 1): exp(-exp(w))."""
+    w = p["w0"] + jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    return jnp.exp(-jnp.exp(w.astype(jnp.float32)))
+
+
+def _wkv_chunked(r, k, v, w, u, state, chunk: int):
+    """Chunked-parallel wkv recurrence (log-space decays).
+
+    r/k/w: (B, T, H, K); v: (B, T, H, V); u: (H, K); state: (B, H, K, V).
+    Exact rewrite of the sequential scan: within a chunk the contribution of
+    step i to output t>i carries decay exp(cum_{t-1} - cum_i) (per channel),
+    computed with the max-subtraction trick so exponents stay bounded;
+    cross-chunk state carries as in SSD.  Returns (y, final state).
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    nc = T // chunk
+    lw = jnp.log(w)                                        # (B,T,H,K), < 0
+
+    def re(a):
+        return a.reshape(B, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    rs, ks, vs, lws = re(r), re(k), re(v), re(lw)
+    tri_lt = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)  # i < t
+
+    def body(S, xs):
+        rc, kc, vc, lwc = xs                               # (B,C,H,*)
+        cum = jnp.cumsum(lwc, axis=1)                      # inclusive, (B,C,H,K)
+        cum_prev = jnp.concatenate(
+            [jnp.zeros_like(cum[:, :1]), cum[:, :-1]], axis=1)  # cum_{t-1}
+        # inter-chunk: y_t += (r_t * exp(cum_{t-1})) @ S
+        rd = rc * jnp.exp(cum_prev)
+        y = jnp.einsum("bthk,bhkv->bthv", rd, S)
+        # intra-chunk: scores_{t,i} = sum_k r_tk k_ik exp(cum_{t-1,k}-cum_{i,k})
+        gap = cum_prev[:, :, None] - cum[:, None, :, :, :]  # (B,t,i,H,K)
+        gap = jnp.where(tri_lt[None, :, :, None, None] > 0, gap, -jnp.inf)
+        score = jnp.einsum("bthk,bihk,btihk->btih", rc, kc, jnp.exp(gap))
+        y = y + jnp.einsum("btih,bihv->bthv", score, vc)
+        # bonus (current token) term
+        y = y + jnp.einsum("bthk,bthk,bthv->bthv",
+                           rc, jnp.broadcast_to(u, rc.shape[1:])[None] * kc
+                           if False else rc * 0 + u[None, None] * kc, vc)             if False else y + jnp.einsum("bthk,bthv->bthv",
+                                         rc * (u[None, None] * kc), vc)
+        # state update: S' = diag(exp(total)) S + sum_i exp(total - cum_i) k_i v_i
+        total = cum[:, -1]                                 # (B,H,K)
+        rem = jnp.exp(total[:, None] - cum)                # (B,C,H,K)
+        S_new = jnp.exp(total)[..., None] * S + jnp.einsum(
+            "bihk,bihv->bhkv", kc * rem, vc)
+        return S_new, y
+
+    state, ys = jax.lax.scan(jax.checkpoint(body), state, (rs, ks, vs, lws))
+    return ys.swapaxes(0, 1).reshape(B, T, H, V), state
+
+
+def _pick_chunk(T: int, target: int = 32) -> int:
+    for c in (target, 16, 8, 4, 2, 1):
+        if c <= T and T % c == 0:
+            return c
+    return 1
+
+
+def _time_mix_core(r, k, v, w, u, state):
+    """One step. r/k/w/u: (B, H, K); v: (B, H, V); state: (B, H, K, V)."""
+    kv = k[..., :, None] * v[..., None, :]                      # (B,H,K,V)
+    out = jnp.einsum("bhk,bhkv->bhv", r, state + u[..., :, None] * kv)
+    new_state = w[..., :, None] * state + kv
+    return out, new_state
+
+
+def _heads(x: jax.Array, H: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], H, x.shape[-1] // H)
+
+
+def time_mix(p: dict, x: jax.Array, x_prev: jax.Array, state: jax.Array,
+             cfg: ModelConfig):
+    """x: (B, T, d); x_prev: (B, d) token before x[:, 0]; state: (B, H, K, V)."""
+    B, T, d = x.shape
+    H = n_rwkv_heads(cfg)
+    h = layers.apply_norm(x, p["ln"], cfg.norm, cfg.rms_eps)
+    hs = jnp.concatenate([x_prev[:, None, :], h[:, :-1, :]], axis=1)  # shifted
+    xr, xk, xv, xw, xg = (_lerp(h, hs, p[m]) for m in ("mu_r", "mu_k", "mu_v", "mu_w", "mu_g"))
+    r = _heads(xr @ p["wr"], H).astype(jnp.float32)
+    k = _heads(xk @ p["wk"], H).astype(jnp.float32)
+    v = _heads(xv @ p["wv"], H).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = _heads(_decay(p, xw), H)                                 # (B,T,H,K) fp32
+    u = _heads(p["u"].astype(jnp.float32), H)                    # (H,K)
+
+    if T >= 8:
+        outs_bt, state = _wkv_chunked(r, k, v, w, u,
+                                      state.astype(jnp.float32),
+                                      _pick_chunk(T))
+        y = outs_bt.reshape(B, T, d).astype(x.dtype)
+    else:
+        def step(s, inp):
+            rt, kt, vt, wt = inp
+            out, s = _time_mix_core(rt, kt, vt, wt, u[None], s)
+            return s, out
+
+        xs = tuple(a.swapaxes(0, 1) for a in (r, k, v, w))       # (T,B,H,K)
+        state, outs = jax.lax.scan(step, state.astype(jnp.float32), xs)
+        y = outs.swapaxes(0, 1).reshape(B, T, d).astype(x.dtype)
+    y = layers.rms_norm(y, p["ln_x"], cfg.rms_eps) * g
+    return x + y @ p["wo"], h[:, -1, :], state
+
+
+def channel_mix(p: dict, x: jax.Array, x_prev: jax.Array, cfg: ModelConfig):
+    h = layers.apply_norm(x, p["ln"], cfg.norm, cfg.rms_eps)
+    hs = jnp.concatenate([x_prev[:, None, :], h[:, :-1, :]], axis=1)
+    r = jax.nn.sigmoid(_lerp(h, hs, p["mu_r"]) @ p["wr"])
+    k = jnp.square(jax.nn.relu(_lerp(h, hs, p["mu_k"]) @ p["wk"]))
+    return x + r * (k @ p["wv"]), h[:, -1, :]
+
+
+def rwkv_block(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    B, _, d = x.shape
+    H = n_rwkv_heads(cfg)
+    hd = rwkv_head_dim(cfg)
+    zeros_prev = jnp.zeros((B, d), x.dtype)
+    state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    x, _, _ = time_mix(params["tm"], x, zeros_prev, state0, cfg)
+    x, _ = channel_mix(params["cm"], x, zeros_prev, cfg)
+    return x
+
+
+def rwkv_prefill(params: dict, x: jax.Array, cfg: ModelConfig):
+    B, _, d = x.shape
+    H = n_rwkv_heads(cfg)
+    hd = rwkv_head_dim(cfg)
+    zeros_prev = jnp.zeros((B, d), x.dtype)
+    state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    x, tm_prev, state = time_mix(params["tm"], x, zeros_prev, state0, cfg)
+    x, cm_prev = channel_mix(params["cm"], x, zeros_prev, cfg)
+    return x, {"x_tm": tm_prev, "x_cm": cm_prev, "state": state}
+
+
+def rwkv_decode(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig):
+    """x: (B, 1, d)."""
+    xo, tm_prev, state = time_mix(
+        params["tm"], x, cache["x_tm"], cache["state"], cfg)
+    xo, cm_prev = channel_mix(params["cm"], xo, cache["x_cm"], cfg)
+    return xo, {"x_tm": tm_prev, "x_cm": cm_prev, "state": state}
+
+
+def rwkv_cache_specs(cfg: ModelConfig, batch: int, dtype=None) -> dict:
+    d = cfg.d_model
+    H = n_rwkv_heads(cfg)
+    hd = rwkv_head_dim(cfg)
+    return {
+        "x_tm": Spec((batch, d), ("cache_batch", "embed"), init="zeros", dtype=dtype),
+        "x_cm": Spec((batch, d), ("cache_batch", "embed"), init="zeros", dtype=dtype),
+        "state": Spec((batch, H, hd, hd), ("cache_batch", "ssm_heads", None, None),
+                      init="zeros", dtype=jnp.float32),
+    }

@@ -1,0 +1,203 @@
+"""Mamba-2 (SSD) blocks — the state-space layers used by zamba2.
+
+Training/prefill use the chunked SSD algorithm (intra-chunk masked matmul +
+inter-chunk recurrent carry), which is how SSDs map onto matrix units (MXU)
+instead of a length-T sequential scan.  Decode is the O(1) single-step
+recurrence over the carried (H, P, N) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.blocks import norm_spec
+from repro.models.common import ModelConfig, Spec
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return 2 * cfg.d_model
+
+
+def n_ssm_heads(cfg: ModelConfig) -> int:
+    di = d_inner(cfg)
+    assert di % cfg.ssm_head_dim == 0, (di, cfg.ssm_head_dim)
+    return di // cfg.ssm_head_dim
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    return d_inner(cfg) + 2 * cfg.ssm_state
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = d_inner(cfg)
+    H = n_ssm_heads(cfg)
+    N = cfg.ssm_state
+    K = cfg.conv_kernel
+    proj_out = 2 * di + 2 * N + H   # z, x, B, C, dt
+    return {
+        "ln": norm_spec(d, cfg.norm),
+        "in_proj": Spec((d, proj_out), ("embed", "ssm_heads")),
+        "conv_w": Spec((K, di + 2 * N), ("conv", "ssm_heads"), scale=0.5),
+        "conv_b": Spec((di + 2 * N,), ("ssm_heads",), init="zeros"),
+        "A_log": Spec((H,), ("ssm_heads",), init="arange_neg"),
+        "D": Spec((H,), ("ssm_heads",), init="ones"),
+        "dt_bias": Spec((H,), ("ssm_heads",), init="zeros"),
+        "norm": Spec((di,), ("ssm_heads",), init="ones"),
+        "out_proj": Spec((di, d), ("ssm_heads", "embed")),
+    }
+
+
+def _split_proj(proj: jax.Array, cfg: ModelConfig):
+    di = d_inner(cfg)
+    N = cfg.ssm_state
+    H = n_ssm_heads(cfg)
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * N], axis=-1)
+    return z, xbc, dt  # xbc = concat(x, B, C) for the conv
+
+
+def _split_xbc(xbc: jax.Array, cfg: ModelConfig):
+    di = d_inner(cfg)
+    N = cfg.ssm_state
+    x, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    return x, Bm, Cm
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, kernel K small: sum of shifted slices."""
+    K = w.shape[0]
+    T = xbc.shape[1]
+    xp = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = b
+    for k in range(K):
+        out = out + w[k] * jax.lax.dynamic_slice_in_dim(xp, k, T, axis=1)
+    return jax.nn.silu(out)
+
+
+def _pick_chunk(T: int, target: int = 128) -> int:
+    for q in (target, 64, 32, 16, 8, 4, 2, 1):
+        if q <= T and T % q == 0:
+            return q
+    return 1
+
+
+def _ssd_chunked(x, dt, Bm, Cm, A_log, *, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B, T, H, P); dt: (B, T, H); Bm/Cm: (B, T, N); A_log: (H,).
+    Returns y (B, T, H, P) and final state (B, H, P, N).
+    """
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = T // chunk
+    logA = -jnp.exp(A_log.astype(jnp.float32))          # (H,)
+
+    def reshape_c(a):
+        return a.reshape(Bsz, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    xs = (reshape_c(x), reshape_c(dt), reshape_c(Bm), reshape_c(Cm))
+    state0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+
+    @jax.checkpoint
+    def body(state, xs_c):
+        xc, dtc, Bc, Cc = xs_c
+        xc32 = xc.astype(jnp.float32)
+        la = dtc.astype(jnp.float32) * logA              # (B, Q, H)
+        cum = jnp.cumsum(la, axis=1)                     # inclusive
+        total = cum[:, -1]                               # (B, H)
+        # intra-chunk: W[b,i,j,h] = (C_i . B_j) exp(cum_i - cum_j) dt_j  (j<=i)
+        Gsc = jnp.einsum("bin,bjn->bij", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+        # mask inside the exponent: exp() of future-position deltas overflows
+        gap = cum[:, :, None, :] - cum[:, None, :, :]
+        L = jnp.exp(jnp.where(tri[None, :, :, None] > 0, gap, -jnp.inf))
+        W = Gsc[..., None] * L * dtc.astype(jnp.float32)[:, None, :, :]
+        y = jnp.einsum("bijh,bjhp->bihp", W, xc32)
+        # inter-chunk: contribution of the carried state
+        y = y + jnp.einsum("bin,bhpn->bihp", Cc.astype(jnp.float32), state) \
+            * jnp.exp(cum)[..., None]
+        # state update
+        decay_rem = jnp.exp(total[:, None, :] - cum)     # (B, Q, H)
+        new_state = jnp.exp(total)[:, :, None, None] * state + jnp.einsum(
+            "bjh,bjn,bjhp->bhpn", dtc.astype(jnp.float32) * decay_rem,
+            Bc.astype(jnp.float32), xc32)
+        return new_state, y
+
+    state, ys = jax.lax.scan(body, state0, xs)
+    y = ys.swapaxes(0, 1).reshape(Bsz, T, H, P)
+    return y.astype(x.dtype), state
+
+
+def mamba_block(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence mamba2 block with residual. x: (B, T, d)."""
+    B, T, d = x.shape
+    H, P, N = n_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
+    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps)
+    z, xbc, dt_raw = _split_proj(h @ params["in_proj"], cfg)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xin, Bm, Cm = _split_xbc(xbc, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    xh = xin.reshape(B, T, H, P)
+    y, _ = _ssd_chunked(xh, dt, Bm, Cm, params["A_log"], chunk=_pick_chunk(T))
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, T, 2 * d)
+    y = layers.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.rms_eps)
+    return x + y @ params["out_proj"]
+
+
+def mamba_prefill(params: dict, x: jax.Array, cfg: ModelConfig):
+    """Like mamba_block but also returns (conv_state, ssm_state) for decode."""
+    B, T, d = x.shape
+    H, P = n_ssm_heads(cfg), cfg.ssm_head_dim
+    K = cfg.conv_kernel
+    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps)
+    z, xbc, dt_raw = _split_proj(h @ params["in_proj"], cfg)
+    conv_state = xbc[:, -(K - 1):, :] if K > 1 else jnp.zeros((B, 0, xbc.shape[-1]), xbc.dtype)
+    xbc_act = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xin, Bm, Cm = _split_xbc(xbc_act, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    xh = xin.reshape(B, T, H, P)
+    y, state = _ssd_chunked(xh, dt, Bm, Cm, params["A_log"], chunk=_pick_chunk(T))
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, T, 2 * d)
+    y = layers.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.rms_eps)
+    return x + y @ params["out_proj"], {"conv": conv_state, "state": state}
+
+
+def mamba_decode(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig):
+    """Single-token decode. x: (B, 1, d); cache: {"conv": (B, K-1, ch), "state": (B,H,P,N)}."""
+    B, _, d = x.shape
+    H, P, N = n_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
+    K = cfg.conv_kernel
+    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps)
+    z, xbc, dt_raw = _split_proj((h @ params["in_proj"])[:, 0], cfg)  # (B, ...)
+    # conv over the rolling window
+    window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B, K, ch)
+    conv_out = jnp.einsum("bkc,kc->bc", window, params["conv_w"]) + params["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:, :]
+    xin, Bm, Cm = _split_xbc(conv_out, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    xh = xin.reshape(B, H, P).astype(jnp.float32)
+    a = jnp.exp(dt * -jnp.exp(params["A_log"].astype(jnp.float32)))    # (B, H)
+    state = cache["state"]
+    state = a[:, :, None, None] * state + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), state)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, 2 * d).astype(x.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z[:, None, :]), params["norm"], cfg.rms_eps)
+    return x + y @ params["out_proj"], {"conv": new_conv, "state": state}
+
+
+def mamba_cache_specs(cfg: ModelConfig, batch: int, dtype=None) -> dict:
+    H, P, N = n_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
+    K = cfg.conv_kernel
+    return {
+        "conv": Spec((batch, K - 1, conv_channels(cfg)),
+                     ("cache_batch", None, "ssm_heads"), init="zeros", dtype=dtype),
+        "state": Spec((batch, H, P, N),
+                      ("cache_batch", "ssm_heads", None, None),
+                      init="zeros", dtype=jnp.float32),
+    }

@@ -1,0 +1,103 @@
+"""AdamW in pure JAX with ZeRO-shardable state.
+
+The optimizer state is a pytree mirroring the parameters (``mu``, ``nu`` in
+fp32 — the paper's Table II "4 bytes/param optimizer states"), plus a step
+counter.  Under ZeRO-1 the state leaves get data-axis shardings from
+``repro.core.sharding.tree_zero_shardings``; the update itself is unchanged —
+GSPMD turns the replicated-math-over-sharded-state into
+reduce-scatter + sharded-update + all-gather, which is exactly DeepSpeed
+ZeRO-1's communication pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float | Callable[[jax.Array], jax.Array] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float | None = 1.0
+
+    def lr_at(self, step: jax.Array) -> jax.Array:
+        if callable(self.lr):
+            return jnp.asarray(self.lr(step), jnp.float32)
+        return jnp.float32(self.lr)
+
+
+def adamw_init(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.int32(0),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def _decay_mask(params: Any) -> Any:
+    """No weight decay on vectors (norms, biases, per-head scalars)."""
+    return jax.tree.map(lambda p: float(p.ndim >= 2), params)
+
+
+def adamw_update(
+    cfg: AdamWConfig, params: Any, grads: Any, state: dict,
+    *, skip: jax.Array | None = None,
+) -> tuple[Any, dict]:
+    """One AdamW step.  ``skip`` (bool scalar) freezes params+state (used when
+    fp16 loss-scaled grads overflow)."""
+    count = state["count"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    lr = cfg.lr_at(count)
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+    mask = _decay_mask(params)
+
+    if cfg.grad_clip is not None:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+
+    def upd(p, g, mu, nu, wd_on):
+        g = g.astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        step = (mu / c1) / (jnp.sqrt(nu / c2) + cfg.eps)
+        step = step + cfg.weight_decay * wd_on * p32
+        return (p32 - lr * step).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    flat_m = jax.tree.leaves(mask)
+    outs = [upd(p, g, mu, nu, m)
+            for p, g, mu, nu, m in zip(flat_p, flat_g, flat_mu, flat_nu, flat_m)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in outs])
+
+    if skip is not None:
+        keep = lambda new, old: jax.tree.map(
+            lambda n, o: jnp.where(skip, o, n), new, old)
+        new_p = keep(new_p, params)
+        new_mu = keep(new_mu, state["mu"])
+        new_nu = keep(new_nu, state["nu"])
+        count = jnp.where(skip, state["count"], count)
+    return new_p, {"mu": new_mu, "nu": new_nu, "count": count}

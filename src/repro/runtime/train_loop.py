@@ -1,0 +1,173 @@
+"""Training step builder: the paper's strategy knobs as one declarative plan.
+
+``TrainPlan`` carries exactly the hyperparameters the paper tunes
+(Tables III–V): the sharding strategy (tensor-parallel rules), ZeRO-1
+on/off, micro-batch size via gradient-accumulation steps (GAS), precision,
+and activation checkpointing (which is implicit: every layer stack is
+scanned under ``jax.checkpoint``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import precision as prec
+from repro.core import sharding as shd
+from repro.models.common import ModelConfig
+from repro.models.model import Model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainPlan:
+    """One point in the paper's hyperparameter space."""
+    rules: str = "megatron_tp"      # sharding strategy preset
+    zero1: bool = True              # ZeRO-1 optimizer-state sharding
+    gas: int = 1                    # gradient accumulation steps
+    precision: str = "bf16"         # bf16 | fp16 | fp32
+    data_axis: str = "data"
+    extra_dp_axes: tuple[str, ...] = ()   # e.g. ("pod",) in multi-pod mode
+    # hillclimbing hook: ((logical_axis, mesh_axis|None), ...) rule overrides
+    rule_overrides: tuple = ()
+
+    def sharding_rules(self) -> shd.ShardingRules:
+        rules = shd.PRESETS[self.rules](data_axis=self.data_axis)
+        if self.extra_dp_axes:
+            batch_axes = tuple(self.extra_dp_axes) + (self.data_axis,)
+            rules = rules.with_overrides(
+                batch=batch_axes, cache_batch=batch_axes,
+                name=rules.name + "+pod_dp")
+        if self.rule_overrides:
+            rules = rules.with_overrides(**dict(self.rule_overrides))
+        return rules
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def train_state_shardings(model: Model, mesh: Mesh, plan: TrainPlan) -> dict:
+    pshapes = model.param_shapes()
+    rules = plan.sharding_rules()
+    psh = shd.tree_shardings(pshapes, model.param_axes(), mesh, rules)
+    if plan.zero1:
+        opt_sh = shd.tree_zero_shardings(pshapes, psh, plan.data_axis)
+    else:
+        opt_sh = psh
+    rep = replicated(mesh)
+    return {
+        "params": psh,
+        "opt": {"mu": opt_sh, "nu": opt_sh, "count": rep},
+        "loss_scale": jax.tree.map(lambda _: rep, prec.init_loss_scale(False)),
+        "step": rep,
+    }
+
+
+def batch_specs(cfg: ModelConfig, global_batch: int, seq_len: int) -> tuple[dict, dict]:
+    """(ShapeDtypeStruct tree, logical-axes tree) for one global train batch."""
+    specs = {"tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)}
+    axes = {"tokens": ("batch", "seq")}
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.enc_seq_len, cfg.frontend_dim), jnp.float32)
+        axes["frames"] = ("batch", None, None)
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.num_patches, cfg.frontend_dim), jnp.float32)
+        axes["patches"] = ("batch", None, None)
+    return specs, axes
+
+
+def batch_shardings(cfg: ModelConfig, global_batch: int, seq_len: int,
+                    mesh: Mesh, plan: TrainPlan) -> dict:
+    specs, axes = batch_specs(cfg, global_batch, seq_len)
+    return shd.tree_shardings(specs, axes, mesh, plan.sharding_rules())
+
+
+def init_train_state(model: Model, key: jax.Array, opt_cfg: AdamWConfig,
+                     plan: TrainPlan) -> dict:
+    params = model.init(key)
+    return {
+        "params": params,
+        "opt": adamw_init(params),
+        "loss_scale": prec.init_loss_scale(plan.precision == "fp16"),
+        "step": jnp.int32(0),
+    }
+
+
+def build_train_step(model: Model, opt_cfg: AdamWConfig, plan: TrainPlan):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    The global batch is split into ``gas`` microbatches consumed by a
+    ``lax.scan`` that accumulates fp32 gradients — the paper's
+    gradient-accumulation knob (and what saturates pipeline stages)."""
+    policy = prec.policy_from_name(plan.precision)
+    model = Model(model.cfg, policy.compute_dtype, model.q_chunk)
+    gas = plan.gas
+
+    def loss_fn(params, micro_batch, scale):
+        loss, metrics = model.loss(params, micro_batch)
+        return prec.scale_loss({"scale": scale}, loss), metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        scale = state["loss_scale"]["scale"]
+
+        def split(x):
+            return x.reshape(gas, x.shape[0] // gas, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+        zero_grads = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def accum(carry, mb):
+            gsum, ce_sum, aux_sum = carry
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb, scale)
+            gsum = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+            return (gsum, ce_sum + metrics["ce"], aux_sum + metrics["moe_aux"]), None
+
+        (gsum, ce_sum, aux_sum), _ = jax.lax.scan(
+            accum, (zero_grads, jnp.float32(0.0), jnp.float32(0.0)), micro)
+
+        grads = prec.unscale_grads(state["loss_scale"],
+                                   jax.tree.map(lambda g: g / gas, gsum))
+        finite = prec.all_finite(grads)
+        new_params, new_opt = adamw_update(
+            opt_cfg, params, grads, state["opt"], skip=~finite)
+        new_ls = prec.update_loss_scale(state["loss_scale"], finite)
+        metrics = {
+            "loss": ce_sum / gas,
+            "moe_aux": aux_sum / gas,
+            "grads_finite": finite,
+            "loss_scale": new_ls["scale"],
+        }
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "loss_scale": new_ls,
+            "step": state["step"] + 1,
+        }
+        return new_state, metrics
+
+    return train_step
+
+
+def jit_train_step(model: Model, opt_cfg: AdamWConfig, plan: TrainPlan,
+                   mesh: Mesh, global_batch: int, seq_len: int):
+    """jit-compiled train step with explicit in/out shardings for ``mesh``."""
+    step = build_train_step(model, opt_cfg, plan)
+    state_sh = train_state_shardings(model, mesh, plan)
+    batch_sh = batch_shardings(model.cfg, global_batch, seq_len, mesh, plan)
+    rep = replicated(mesh)
+    metrics_sh = {"loss": rep, "moe_aux": rep, "grads_finite": rep, "loss_scale": rep}
+    return jax.jit(
+        step,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, metrics_sh),
+        donate_argnums=(0,),
+    )

@@ -1,0 +1,88 @@
+"""Per-architecture smoke tests (deliverable f): a reduced variant of each
+assigned family runs one forward + one optimizer train step on CPU."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.models.model import Model
+from repro.optim import AdamWConfig
+from repro.runtime.train_loop import TrainPlan, init_train_state, jit_train_step
+from repro.launch.mesh import single_device_mesh
+
+
+def _batch(cfg, B=2, S=16, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 3)
+    batch = {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["frames"] = 0.1 * jax.random.normal(
+            ks[1], (B, cfg.enc_seq_len, cfg.frontend_dim), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patches"] = 0.1 * jax.random.normal(
+            ks[1], (B, cfg.num_patches, cfg.frontend_dim), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_forward_shapes_and_finite(name):
+    cfg = get_config(name).reduced()
+    model = Model(cfg, jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits = model.logits(params, batch)
+    S_out = 16 + (cfg.num_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, S_out, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_one_train_step(name):
+    cfg = get_config(name).reduced()
+    model = Model(cfg, jnp.float32)
+    plan = TrainPlan(gas=1, precision="fp32")
+    mesh = single_device_mesh()
+    state = init_train_state(model, jax.random.PRNGKey(0), AdamWConfig(lr=1e-3), plan)
+    before = jax.device_get(state["params"])  # state is donated by the step
+    step = jit_train_step(model, AdamWConfig(lr=1e-3), plan, mesh, 2, 16)
+    new_state, metrics = step(state, _batch(cfg))
+    assert bool(metrics["grads_finite"])
+    assert float(metrics["loss"]) > 0 and jnp.isfinite(metrics["loss"])
+    assert int(new_state["step"]) == 1
+    # params actually changed
+    after = jax.device_get(new_state["params"])
+    moved = jax.tree.map(lambda a, b: bool((a != b).any()), before, after)
+    assert any(jax.tree.leaves(moved))
+
+
+def test_vocab_padding_exact():
+    """Padded-vocab (sharding optimization) is numerically identical."""
+    import dataclasses
+    import numpy as np
+    from repro.models.model import Model as M
+
+    cfg = get_config("yi-6b").reduced(vocab_size=250)
+    m1 = M(cfg, jnp.float32)
+    m2 = M(dataclasses.replace(cfg, vocab_pad_multiple=64), jnp.float32)
+    p1 = m1.init(jax.random.PRNGKey(0))
+    p2 = m2.init(jax.random.PRNGKey(0))
+    p2["embed"] = p2["embed"].at[:250].set(p1["embed"])
+    p2["lm_head"] = p2["lm_head"].at[:, :250].set(p1["lm_head"])
+    p2["layers"], p2["final_norm"] = p1["layers"], p1["final_norm"]
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 250)}
+    l1, _ = m1.loss(p1, batch)
+    l2, _ = m2.loss(p2, batch)
+    assert abs(float(l1) - float(l2)) < 1e-6
+    g1, g2 = m1.logits(p1, batch), m2.logits(p2, batch)
+    assert g1.shape == g2.shape  # padded logits are sliced back
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5)
+
+
+def test_grad_cast_keeps_cotangent_dtype():
+    from repro.models.model import grad_cast
+
+    def f(x):
+        return grad_cast(x, jnp.bfloat16).astype(jnp.float32).sum()
+
+    x = jnp.ones((4,), jnp.bfloat16)
+    g = jax.grad(f)(x)
+    assert g.dtype == jnp.bfloat16

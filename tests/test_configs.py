@@ -1,0 +1,88 @@
+"""Assigned-architecture configs match the assignment table exactly."""
+import pytest
+
+from repro.configs import ASSIGNED, PAPER, get_config, all_configs
+from repro.models.model import Model
+
+SPEC = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+    "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+    "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+    "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+    "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+    "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+    "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+    "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+    "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+    "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+}
+
+
+@pytest.mark.parametrize("name", sorted(SPEC))
+def test_exact_dims(name):
+    cfg = get_config(name)
+    L, d, h, kv, ff, V = SPEC[name]
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab_size == V
+
+
+def test_flavours():
+    assert get_config("qwen3-32b").qk_norm
+    assert get_config("h2o-danube-1.8b").sliding_window == 4096
+    assert get_config("llama4-maverick-400b-a17b").n_experts == 128
+    assert get_config("llama4-maverick-400b-a17b").top_k == 1
+    assert get_config("arctic-480b").top_k == 2
+    assert get_config("arctic-480b").moe_dense_residual
+    assert get_config("zamba2-2.7b").ssm_state == 64
+    assert get_config("rwkv6-1.6b").family == "rwkv"
+    assert get_config("seamless-m4t-medium").enc_layers == 12
+
+
+@pytest.mark.parametrize("name,lo,hi", [
+    ("yi-6b", 5.5e9, 6.7e9),
+    ("rwkv6-1.6b", 1.3e9, 2.1e9),
+    ("zamba2-2.7b", 2.2e9, 3.3e9),
+    ("internvl2-2b", 1.7e9, 2.6e9),
+    ("h2o-danube-1.8b", 1.5e9, 2.2e9),
+    ("phi4-mini-3.8b", 3.2e9, 4.6e9),
+    ("qwen3-32b", 28e9, 36e9),
+    ("arctic-480b", 4.3e11, 5.3e11),
+    ("llama4-maverick-400b-a17b", 3.4e11, 4.6e11),
+])
+def test_param_counts(name, lo, hi):
+    n = Model(get_config(name)).n_params()
+    assert lo <= n <= hi, f"{name}: {n:.3e} outside [{lo:.1e}, {hi:.1e}]"
+
+
+def test_paper_gpt_formula():
+    # paper: params ~= 12 L d^2 (Table I / II)
+    for name, size in [("gpt-22b", 22e9), ("gpt-175b", 175e9), ("gpt-1t", 1e12)]:
+        cfg = get_config(name)
+        n = Model(cfg).n_params()
+        formula = 12 * cfg.n_layers * cfg.d_model ** 2
+        assert abs(n - formula) / formula < 0.08
+        assert abs(n - size) / size < 0.1
+
+
+def test_reduced_is_small():
+    for name in ASSIGNED:
+        r = get_config(name).reduced()
+        assert r.n_layers <= 2 and r.d_model <= 512
+        assert r.n_experts <= 4
+        assert Model(r).n_params() < 3e7
+
+
+def test_llama4_interleaved_active_params():
+    """llama4-maverick: ~400B total, ~17B active (name-plate check)."""
+    from repro.analysis.roofline import param_counts
+    pc = param_counts(get_config("llama4-maverick-400b-a17b"))
+    assert 3.6e11 < pc["total"] < 4.4e11, pc
+    assert 1.0e10 < pc["active"] < 2.0e10, pc
+
+
+def test_arctic_total_params():
+    from repro.analysis.roofline import param_counts
+    pc = param_counts(get_config("arctic-480b"))
+    assert 4.3e11 < pc["total"] < 5.2e11, pc

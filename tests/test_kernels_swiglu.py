@@ -1,0 +1,33 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import swiglu_ref
+
+
+@pytest.mark.parametrize("shape", [(64, 32, 128), (256, 64, 512), (128, 96, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swiglu_sweep(shape, dtype):
+    N, d, F = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (N, d)).astype(dtype)
+    w1 = (jax.random.normal(ks[1], (d, F)) * 0.1).astype(dtype)
+    w3 = (jax.random.normal(ks[2], (d, F)) * 0.1).astype(dtype)
+    out = ops.swiglu(x, w1, w3)
+    ref = swiglu_ref(x, w1, w3)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+def test_swiglu_batched_dims():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = jax.random.normal(ks[0], (2, 8, 32))
+    w1 = jax.random.normal(ks[1], (32, 64)) * 0.1
+    w3 = jax.random.normal(ks[2], (32, 64)) * 0.1
+    out = ops.swiglu(x, w1, w3)
+    assert out.shape == (2, 8, 64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(swiglu_ref(x, w1, w3)),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,35 @@
+"""int8 KV-cache serving: close to bf16 cache, half the bytes."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import Model
+
+
+@pytest.mark.parametrize("name", ["yi-6b", "h2o-danube-1.8b", "zamba2-2.7b"])
+def test_kv_quant_decode_close(name):
+    cfg = get_config(name).reduced()
+    m_ref = Model(cfg, jnp.float32)
+    m_q = Model(dataclasses.replace(cfg, kv_quant=True), jnp.float32)
+    params = m_ref.init(jax.random.PRNGKey(0))
+    B, S = 2, 17
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 4), 0, cfg.vocab_size)
+    lr, cr = m_ref.prefill(params, {"tokens": toks[:, :S]}, cache_len=32)
+    lq, cq = m_q.prefill(params, {"tokens": toks[:, :S]}, cache_len=32)
+    # int8 storage
+    if cfg.family == "hybrid":
+        assert cq["shared"]["k"].dtype == jnp.int8
+    else:
+        assert cq["layers"]["k"].dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(lq), np.asarray(lr), rtol=0.08, atol=0.15)
+    for t in range(S, S + 4):
+        lr, cr = m_ref.decode_step(params, cr, {"token": toks[:, t:t + 1]})
+        lq, cq = m_q.decode_step(params, cq, {"token": toks[:, t:t + 1]})
+        np.testing.assert_allclose(np.asarray(lq), np.asarray(lr),
+                                   rtol=0.08, atol=0.15)
+    # greedy decisions identical on this scale
+    assert (jnp.argmax(lq, -1) == jnp.argmax(lr, -1)).all()

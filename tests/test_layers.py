@@ -1,0 +1,91 @@
+"""Layer-level unit tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import layers
+
+
+def _qkv(B=2, Sq=32, Skv=32, Hq=4, Hkv=2, hd=16, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, hd), dtype)
+    return q, k, v
+
+
+def _dense_ref(q, k, v, causal=True, window=None, q_offset=0):
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    kr = jnp.repeat(k, G, axis=2)
+    vr = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kr) / np.sqrt(hd)
+    qp = jnp.arange(Sq) + q_offset
+    kp = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kp[None] <= qp[:, None]
+    if window is not None:
+        mask &= qp[:, None] - kp[None] < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vr)
+
+
+def test_attention_matches_dense_reference():
+    q, k, v = _qkv()
+    out = layers.attention(q, k, v, causal=True)
+    ref = _dense_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_attention_chunked_equals_direct():
+    q, k, v = _qkv(Sq=64, Skv=64)
+    direct = layers.attention(q, k, v, causal=True, q_chunk=64)
+    chunked = layers.attention(q, k, v, causal=True, q_chunk=16)
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(chunked),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_attention_sliding_window():
+    q, k, v = _qkv(Sq=32, Skv=32)
+    out = layers.attention(q, k, v, causal=True, sliding_window=8)
+    ref = _dense_ref(q, k, v, window=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_attention_q_offset_decode():
+    q, k, v = _qkv(Sq=1, Skv=32)
+    out = layers.attention(q, k, v, causal=True, q_offset=10)
+    ref = _dense_ref(q, k, v, q_offset=10)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_rope_preserves_norm_and_relativity():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 16))
+    pos = jnp.arange(8)
+    y = layers.apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 16))
+    def dot_at(i, j):
+        qi = layers.apply_rope(q, jnp.array([i]), 1e4)[0, 0, 0]
+        kj = layers.apply_rope(k, jnp.array([j]), 1e4)[0, 0, 0]
+        return float(qi @ kj)
+    assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-4
+
+
+def test_norms():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 32)) * 3 + 1
+    w = jnp.ones(32)
+    y = layers.rms_norm(x, w, 1e-6)
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+    b = jnp.zeros(32)
+    z = layers.layer_norm(x, w, b, 1e-6)
+    np.testing.assert_allclose(np.mean(np.asarray(z), -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.std(np.asarray(z), -1), 1.0, rtol=1e-3)

@@ -1,0 +1,62 @@
+"""AdamW, grad clipping, loss scaling."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import precision as prec
+from repro.optim import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm, global_norm
+
+
+def test_adamw_matches_manual_reference():
+    cfg = AdamWConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0, grad_clip=None)
+    p = {"w": jnp.array([[1.0, 2.0], [3.0, 4.0]])}
+    g = {"w": jnp.array([[0.1, -0.2], [0.3, 0.5]])}
+    st = adamw_init(p)
+    newp, st = adamw_update(cfg, p, g, st)
+    # manual
+    mu = 0.1 * np.asarray(g["w"]); nu = 0.01 * np.asarray(g["w"]) ** 2
+    mhat = mu / (1 - 0.9); nhat = nu / (1 - 0.99)
+    ref = np.asarray(p["w"]) - 0.1 * mhat / (np.sqrt(nhat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(newp["w"]), ref, rtol=1e-6)
+
+
+def test_weight_decay_only_on_matrices():
+    cfg = AdamWConfig(lr=0.1, weight_decay=1.0, grad_clip=None)
+    p = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    g = jax.tree.map(jnp.zeros_like, p)
+    st = adamw_init(p)
+    newp, _ = adamw_update(cfg, p, g, st)
+    assert float(jnp.abs(newp["w"] - 1).max()) > 0.01  # decayed
+    np.testing.assert_allclose(np.asarray(newp["b"]), 1.0)  # not decayed
+
+
+def test_skip_freezes_everything():
+    cfg = AdamWConfig(lr=0.1)
+    p = {"w": jnp.ones((2, 2))}
+    g = {"w": jnp.full((2, 2), jnp.nan)}
+    st = adamw_init(p)
+    newp, newst = adamw_update(cfg, p, g, st, skip=jnp.bool_(True))
+    np.testing.assert_allclose(np.asarray(newp["w"]), 1.0)
+    assert int(newst["count"]) == 0
+
+
+def test_clip_by_global_norm():
+    t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    clipped, norm = clip_by_global_norm(t, 1.0)
+    np.testing.assert_allclose(float(norm), 5.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+
+
+def test_dynamic_loss_scale():
+    ls = prec.init_loss_scale(True, init_scale=1024.0)
+    # overflow halves
+    ls2 = prec.update_loss_scale(ls, jnp.bool_(False))
+    assert float(ls2["scale"]) == 512.0
+    # growth after interval
+    ls3 = dict(ls, good_steps=jnp.int32(1999))
+    ls4 = prec.update_loss_scale(ls3, jnp.bool_(True), growth_interval=2000)
+    assert float(ls4["scale"]) == 2048.0 and int(ls4["good_steps"]) == 0
+    # disabled: never changes
+    lsd = prec.init_loss_scale(False)
+    lsd2 = prec.update_loss_scale(lsd, jnp.bool_(False))
+    assert float(lsd2["scale"]) == 1.0

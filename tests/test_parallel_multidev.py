@@ -1,0 +1,133 @@
+"""Multi-device (8 virtual CPU devices, subprocess) parallel-correctness:
+TP sharding, ZeRO-1 state sharding, and FSDP rules all reproduce the
+single-device training step bit-for-bit (up to float tolerance)."""
+
+TP_ZERO_CODE = '''
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.optim import AdamWConfig
+from repro.runtime.train_loop import TrainPlan, init_train_state, jit_train_step
+from repro.launch.mesh import make_mesh_2d
+from repro.data import SyntheticCorpus, make_batch_iterator
+
+cfg = get_config("yi-6b").reduced(n_layers=2, d_model=128, n_heads=4,
+                                  n_kv_heads=2, d_ff=256, vocab_size=256, head_dim=32)
+model = Model(cfg, jnp.float32)
+opt = AdamWConfig(lr=1e-3)
+corpus = SyntheticCorpus(vocab_size=cfg.vocab_size)
+batches = []
+it = make_batch_iterator(corpus, seq_len=32, global_batch=8, prefetch=0)
+for _ in range(3):
+    batches.append(next(it))
+
+results = {}
+for label, (dp, tp), plan in [
+    ("ref",   (1, 1), TrainPlan(gas=1, precision="fp32", zero1=False, rules="dp_only")),
+    ("tp4",   (2, 4), TrainPlan(gas=1, precision="fp32", zero1=False)),
+    ("zero1", (8, 1), TrainPlan(gas=1, precision="fp32", zero1=True)),
+    ("fsdp",  (8, 1), TrainPlan(gas=2, precision="fp32", zero1=True, rules="fsdp")),
+    ("gas4",  (2, 4), TrainPlan(gas=4, precision="fp32", zero1=True)),
+]:
+    mesh = make_mesh_2d(dp, tp)
+    state = init_train_state(model, jax.random.PRNGKey(0), opt, plan)
+    step = jit_train_step(model, opt, plan, mesh, 8, 32)
+    losses = []
+    for b in batches:
+        state, m = step(state, b)
+        losses.append(float(m["loss"]))
+    results[label] = (losses, jax.device_get(state["params"]["embed"]))
+    if label == "zero1":
+        # optimizer state is actually sharded over data
+        mu_sh = None
+        # check a big leaf's sharding spec includes "data"
+        sh = jax.tree.leaves(state["opt"]["mu"])[3].sharding
+        found = any("data" in str(s) for s in [sh.spec])
+        assert found, f"zero1 mu not sharded over data: {sh.spec}"
+
+ref_losses, ref_embed = results["ref"]
+for label, (losses, embed) in results.items():
+    if label in ("ref", "gas4"):
+        continue
+    np.testing.assert_allclose(losses, ref_losses, rtol=2e-4, err_msg=label)
+    np.testing.assert_allclose(embed, ref_embed, rtol=2e-3, atol=2e-4, err_msg=label)
+# gas4 averages grads over microbatches == full batch here (loss mean) -> same losses
+np.testing.assert_allclose(results["gas4"][0], ref_losses, rtol=2e-3)
+print("PARALLEL_OK")
+'''
+
+
+def test_tp_zero_fsdp_equivalence(multidev):
+    out = multidev(TP_ZERO_CODE, n_devices=8)
+    assert "PARALLEL_OK" in out
+
+
+PIPELINE_CODE = '''
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_pipeline_mesh
+from repro.core import pipeline as pp
+
+L, B, S, d = 8, 8, 16, 32
+w = 0.3 * jax.random.normal(jax.random.PRNGKey(0), (L, d, d))
+x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d))
+
+def layer_fn(lp, x):
+    return jnp.tanh(x @ lp)
+
+def ref_loss(w, x):
+    def body(c, lp): return layer_fn(lp, c), None
+    y, _ = jax.lax.scan(body, x, w)
+    return jnp.mean(y ** 2)
+
+for p_stages, m in ((2, 4), (4, 8), (8, 8)):
+    mesh = make_pipeline_mesh(p_stages, 1)
+    pipelined = pp.pipeline_apply(pp.layer_stage_fn(layer_fn), mesh)
+    def pipe_loss(w, x):
+        stages = pp.stack_stages(w, p_stages)
+        micro = x.reshape(m, B // m, S, d)
+        y = pipelined(stages, micro).reshape(B, S, d)
+        return jnp.mean(y ** 2)
+    with mesh:
+        l1, g1 = jax.value_and_grad(ref_loss)(w, x)
+        l2, g2 = jax.value_and_grad(pipe_loss)(w, x)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-5, atol=1e-6)
+print("PIPELINE_OK")
+'''
+
+
+def test_pipeline_grads(multidev):
+    out = multidev(PIPELINE_CODE, n_devices=8)
+    assert "PIPELINE_OK" in out
+
+
+DRYRUN_SMALL_CODE = '''
+import jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.optim import AdamWConfig
+from repro.runtime.train_loop import TrainPlan, jit_train_step, batch_specs
+from repro.launch.dryrun import train_state_sds
+from repro.analysis import hlo_cost
+
+# small-mesh version of the production dry-run machinery
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+cfg = get_config("qwen3-32b").reduced()
+model = Model(cfg, jnp.bfloat16)
+plan = TrainPlan(gas=2)
+step = jit_train_step(model, AdamWConfig(), plan, mesh, 8, 64)
+bsds, _ = batch_specs(cfg, 8, 64)
+lowered = step.lower(train_state_sds(model), bsds)
+compiled = lowered.compile()
+t = hlo_cost.analyze(compiled.as_text())
+assert t.flops > 0 and t.collective_total > 0, (t.flops, t.collective_total)
+assert "all-reduce" in t.collective_bytes  # TP all-reduces present
+print("DRYRUN_SMALL_OK", int(t.flops), dict(t.collective_bytes))
+'''
+
+
+def test_dryrun_machinery_small_mesh(multidev):
+    out = multidev(DRYRUN_SMALL_CODE, n_devices=8)
+    assert "DRYRUN_SMALL_OK" in out

@@ -1,0 +1,25 @@
+import jax.numpy as jnp
+
+from repro.core import precision as prec
+
+
+def test_policy_casting():
+    pol = prec.policy_from_name("bf16")
+    tree = {"w": jnp.ones((2,), jnp.float32), "i": jnp.ones((2,), jnp.int32)}
+    c = pol.cast_to_compute(tree)
+    assert c["w"].dtype == jnp.bfloat16
+    assert c["i"].dtype == jnp.int32  # ints untouched
+
+
+def test_all_finite():
+    assert bool(prec.all_finite({"a": jnp.ones(3)}))
+    assert not bool(prec.all_finite({"a": jnp.array([1.0, jnp.nan])}))
+    assert bool(prec.all_finite({"i": jnp.ones(3, jnp.int32)}))
+
+
+def test_scale_unscale_roundtrip():
+    ls = prec.init_loss_scale(True, 256.0)
+    g = {"w": jnp.ones(4, jnp.float16) * 256.0}
+    un = prec.unscale_grads(ls, g)
+    assert un["w"].dtype == jnp.float32
+    assert float(un["w"][0]) == 1.0

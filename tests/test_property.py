@@ -1,0 +1,88 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bubble import bubble_fraction, pipeline_efficiency
+from repro.data import SyntheticCorpus
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import rmsnorm_ref
+from repro.kernels import ops
+from repro.models import layers
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 16), st.integers(1, 64), st.integers(1, 4))
+def test_bubble_fraction_bounds_and_monotonicity(p, m, v):
+    b = bubble_fraction(p, m, v, schedule="1f1b_interleaved")
+    assert 0.0 <= b < 1.0
+    # more microbatches -> never worse (Obs. III.2)
+    assert bubble_fraction(p, m + 1, v, schedule="1f1b_interleaved") <= b + 1e-12
+    # more stages at fixed m -> never better (Obs. III.3)
+    assert bubble_fraction(p + 1, m, v, schedule="1f1b_interleaved") >= b - 1e-12
+    # fixed p/m ratio keeps efficiency (Obs. III.4)
+    e1 = pipeline_efficiency(p, m)
+    e2 = pipeline_efficiency(2 * p, 2 * m)
+    assert abs(e1 - e2) < 0.12
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 10_000), st.floats(0.5, 4.0))
+def test_rmsnorm_scale_invariance(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 32))
+    w = jnp.ones(32)
+    a = rmsnorm_ref(x * scale, w)
+    b = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 1000))
+def test_attention_causality(seed):
+    """Perturbing future tokens never changes past outputs."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (1, 16, 2, 8))
+    k = jax.random.normal(ks[1], (1, 16, 2, 8))
+    v = jax.random.normal(ks[2], (1, 16, 2, 8))
+    out1 = layers.attention(q, k, v, causal=True)
+    k2 = k.at[:, 9:].add(jax.random.normal(ks[3], (1, 7, 2, 8)))
+    v2 = v.at[:, 9:].add(1.0)
+    out2 = layers.attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(np.asarray(out1[:, :9]), np.asarray(out2[:, :9]),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 500))
+def test_flash_kernel_causality(seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (1, 1, 128, 32))
+    k = jax.random.normal(ks[1], (1, 1, 128, 32))
+    v = jax.random.normal(ks[2], (1, 1, 128, 32))
+    o1 = flash_attention(q, k, v, True, None, 0, 64, 64, True)
+    k2 = k.at[:, :, 64:].set(0.0)
+    v2 = v.at[:, :, 64:].set(9.0)
+    o2 = flash_attention(q, k2, v2, True, None, 0, 64, 64, True)
+    np.testing.assert_allclose(np.asarray(o1[:, :, :64]), np.asarray(o2[:, :, :64]),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 10_000))
+def test_corpus_determinism(doc):
+    c1 = SyntheticCorpus(vocab_size=512, seed=7)
+    c2 = SyntheticCorpus(vocab_size=512, seed=7)
+    np.testing.assert_array_equal(c1.document(doc), c2.document(doc))
+    assert (c1.document(doc) < 512).all() and (c1.document(doc) >= 0).all()
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 6), st.integers(1, 4))
+def test_moe_group_shape(b_log, s_log):
+    from repro.models.moe import group_shape
+    n = (2 ** b_log) * (2 ** s_log) * 257  # awkward factor
+    G, g = group_shape(n)
+    assert G * g == n and g >= 1

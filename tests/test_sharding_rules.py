@@ -1,0 +1,55 @@
+"""Sharding-rule unit tests: divisibility fallback, ZeRO spec, presets."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import sharding as shd
+from repro.launch.mesh import make_mesh_2d
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh_2d(1, 1)
+
+
+def test_partition_spec_basic():
+    import jax
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = shd.megatron_rules()
+    spec = shd.partition_spec((64, 128), ("embed", "mlp"), mesh, rules)
+    # model axis size 1 -> replicated
+    assert spec == P(None, None)
+
+
+def test_divisibility_fallback(multidev):
+    code = '''
+import jax
+from jax.sharding import PartitionSpec as P
+from repro.core import sharding as shd
+from repro.launch.mesh import make_mesh_2d
+mesh = make_mesh_2d(2, 4)
+rules = shd.megatron_rules()
+# mlp dim 128 divisible by 4 -> sharded; heads dim 6 not -> replicated
+assert shd.partition_spec((64, 128), ("embed", "mlp"), mesh, rules) == P(None, "model")
+assert shd.partition_spec((64, 6), ("embed", "heads"), mesh, rules) == P(None, None)
+# batch over data
+assert shd.partition_spec((8, 32), ("batch", "seq"), mesh, rules) == P("data", None)
+# one mesh axis may shard only one dim
+assert shd.partition_spec((8, 8), ("heads", "mlp"), mesh, rules) == P("model", None)
+# zero: adds data to first free divisible dim
+base = shd.partition_spec((64, 128), ("embed", "mlp"), mesh, rules)
+z = shd.zero_partition_spec((64, 128), base, mesh, "data")
+assert z == P("data", "model")
+# already data-sharded -> unchanged
+b2 = shd.partition_spec((8, 32), ("batch", "seq"), mesh, rules)
+assert shd.zero_partition_spec((8, 32), b2, mesh, "data") == b2
+print("SHARDING_OK")
+'''
+    assert "SHARDING_OK" in multidev(code, n_devices=8)
+
+
+def test_preset_names():
+    for name in ("megatron_tp", "fsdp", "dp_only", "tp_only"):
+        r = shd.PRESETS[name]()
+        assert r.name == name
