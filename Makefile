@@ -1,0 +1,23 @@
+# One-invocation entry points for CI and local development.
+#
+#   make test   - tier-1 verify (the ROADMAP.md command)
+#   make lint   - syntax-check every python file (no third-party linters
+#                 in the container; compileall catches parse errors)
+#   make smoke  - 1-step reduced train run of a pp=2 ParallelPlan on 4
+#                 virtual devices: proves the unified 3D executor end-to-end
+
+PY := python
+
+.PHONY: test lint smoke
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+lint:
+	$(PY) -m compileall -q src tests benchmarks examples
+
+smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+	$(PY) -m repro.launch.train --arch yi-6b --reduced \
+	    --dp 2 --pp 2 --gas 2 --steps 1 --global-batch 8 --seq-len 64 \
+	    --log-every 1

@@ -2,18 +2,18 @@
 model; trajectory improves, OOM-failure frequency decays."""
 from benchmarks._util import emit
 from repro.core import costmodel as cm
-from repro.core.hpo import SPACE_175B, bayesian_search
+from repro.core.hpo import SPACE_175B, bayesian_search, plan_objective
 
 
-def objective(cfg):
-    n_gpus = cfg["nnodes"] * 8
-    tp, pp = cfg["tp"], cfg["pp"]
-    if n_gpus % (tp * pp) != 0:
-        return -1.0
-    dp = n_gpus // (tp * pp)
-    pc = cm.ParallelCfg(tp=tp, pp=pp, mbs=cfg["mbs"], gas=cfg["gas"],
-                        dp=dp, zero1=bool(cfg["zero1"]))
+def _plan_tflops(plan, cfg):
+    # each trial is a concrete 3D ParallelPlan (the executor's own type);
+    # the cost model scores it exactly as the paper's F-objective does
+    pc = cm.ParallelCfg(tp=plan.tp, pp=plan.pp, mbs=cfg["mbs"], gas=plan.gas,
+                        dp=plan.dp, zero1=plan.zero1)
     return cm.predict(cm.GPT_175B, pc, cm.FRONTIER).objective
+
+
+objective = plan_objective(_plan_tflops)
 
 
 def run() -> None:

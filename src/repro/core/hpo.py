@@ -35,6 +35,41 @@ SPACE_175B = (
 )
 
 
+def trial_plan(config: dict, *, gpus_per_node: int = 8,
+               rules: str = "megatron_tp", precision: str = "bf16"):
+    """Concretize one search-space config into a real 3D ``ParallelPlan``.
+
+    The search enumerates (pp, tp, gas, zero1, nnodes); dp is whatever
+    tiles the remaining devices (``nnodes * gpus_per_node / (tp * pp)``) —
+    exactly the paper's decomposition.  Returns ``None`` when the config
+    cannot tile the device count (the F-objective failure case: callers
+    penalize it below every success so the surrogate learns to avoid it).
+    ``mbs`` stays a cost-model knob: the executor derives the microbatch
+    size from global_batch / gas.
+    """
+    from repro.runtime.train_loop import ParallelPlan  # lazy: hpo stays numpy-only
+
+    world = int(config.get("nnodes", 1)) * gpus_per_node
+    tp, pp = int(config.get("tp", 1)), int(config.get("pp", 1))
+    if tp < 1 or pp < 1 or world % (tp * pp) != 0:
+        return None
+    return ParallelPlan(
+        dp=world // (tp * pp), tp=tp, pp=pp,
+        gas=int(config.get("gas", 1)), zero1=bool(config.get("zero1", True)),
+        rules=rules, precision=precision)
+
+
+def plan_objective(plan_fn, *, gpus_per_node: int = 8, fail_value: float = -1.0):
+    """Adapt an objective over ``ParallelPlan``s to the config-dict interface
+    of :func:`bayesian_search`, penalizing untileable configs as failures."""
+    def objective(config: dict) -> float:
+        plan = trial_plan(config, gpus_per_node=gpus_per_node)
+        if plan is None:
+            return fail_value
+        return plan_fn(plan, config)
+    return objective
+
+
 @dataclasses.dataclass
 class Trial:
     config: dict

@@ -14,6 +14,18 @@ GPipe/PipeDream scheduling:
 
 ``stage_fn(stage_params, x) -> x`` is applied once per device per tick;
 stage parameters live sharded over the pipe axis (leading ``stage`` dim).
+
+Two implementations coexist:
+
+  * :func:`pipeline_apply` / :func:`pipeline_apply_interleaved` — explicit
+    ``shard_map`` ring with manual ``ppermute``; requires every mesh axis to
+    be manual, so it only composes with TP/DP via hand-written collectives.
+    Kept for the pipe-only analysis meshes, tests, and examples.
+  * :func:`pipeline_spmd` — the unified 3D executor's path: ``vmap`` over
+    the stage dim plus ``jnp.roll`` shifts under plain GSPMD.  XLA lowers
+    the roll of a pipe-sharded dim to the same collective-permute as the
+    manual ring, while the "data"/"model" axes stay auto-sharded — this is
+    what lets one ``jit_train_step`` express any (dp, tp, pp) plan.
 """
 from __future__ import annotations
 
@@ -22,7 +34,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 
@@ -154,6 +166,87 @@ def pipeline_apply_interleaved(
     return apply
 
 
+def pipeline_spmd(
+    stage_fn: Callable[[Any, jax.Array], jax.Array],
+    mesh: Mesh,
+    *,
+    n_stages: int,
+    v: int = 1,
+    pipe_axis: str = "pipe",
+    data_axis: str = "data",
+) -> Callable[[Any, jax.Array], jax.Array]:
+    """GSPMD circular pipeline — composes with auto TP/DP axes.
+
+    Returns ``pipelined(stacked_stage_params, microbatches)`` where
+
+      * ``stacked_stage_params``: pytree with leading dim ``v * n_stages``
+        (logical stage ``s`` runs on pipe-rank ``s // v``: each rank hosts
+        a *contiguous* block of ``v`` stages, so block-sharding the layer
+        stack over the pipe axis makes the stage split a local reshape —
+        no cross-pipe resharding of parameters),
+      * ``microbatches``: ``(m, mbs, ...)``,
+
+    and the result is ``(m, mbs, ...)`` after all ``v * n_stages`` stages.
+
+    Mechanics: a ``(p, v, mbs, ...)`` in-flight buffer holds what every
+    logical stage is processing; each tick applies ``vmap(vmap(stage_fn))``
+    over the (pipe, slot) dims and advances the buffer one logical stage
+    (slot-local shift, plus a ``jnp.roll`` over the pipe-sharded dim for
+    the block boundary — lowered by XLA to the cross-stage
+    collective-permute).  Microbatch j enters logical stage 0 at tick j
+    and exits stage ``S-1`` at tick ``j + S - 1``; total ticks
+    ``T = m + S - 1`` give the GPipe bubble ``(S-1)/(m+S-1)`` for
+    ``S = v * p`` logical stages (see ``core/bubble.py``).  Note ``v > 1``
+    here is a *finer-grained* pipeline (more, smaller cross-stage
+    transfers; slightly larger bubble), not Megatron's interleaved 1F1B
+    schedule whose bubble *shrinks* with v — that schedule exists in the
+    manual ring (:func:`pipeline_apply_interleaved`) and analytically in
+    ``core/bubble.py``.  No manual collectives: the "data"/"model" mesh
+    axes remain auto, so TP-sharded stage params and DP-sharded
+    microbatches work unchanged inside ``stage_fn``.
+    """
+    p = n_stages
+    S = v * p
+
+    def _constraint(mbs: int):
+        if pipe_axis not in mesh.shape or mesh.shape[pipe_axis] <= 1:
+            return None
+        dp = mesh.shape.get(data_axis, 1) if data_axis in mesh.shape else 1
+        batch = data_axis if (dp > 1 and mbs % dp == 0) else None
+        return NamedSharding(mesh, P(pipe_axis, None, batch))
+
+    def pipelined(stacked_stage_params, micro):
+        m = micro.shape[0]
+        stages = jax.tree.map(
+            lambda a: a.reshape(p, v, *a.shape[1:]), stacked_stage_params)
+        sh = _constraint(micro.shape[1])
+
+        def keep(x):
+            return x if sh is None else jax.lax.with_sharding_constraint(x, sh)
+
+        buf = keep(jnp.zeros((p, v) + micro.shape[1:], micro.dtype))
+
+        def tick(buf, t):
+            mb = jnp.clip(t, 0, m - 1)
+            x0 = jax.lax.dynamic_index_in_dim(micro, mb, 0, keepdims=False)
+            buf = buf.at[0, 0].set(x0.astype(buf.dtype))
+            out = jax.vmap(jax.vmap(stage_fn))(stages, keep(buf))
+            out = keep(out)
+            y = out[-1, -1]
+            # advance every in-flight microbatch one logical stage
+            # (s = d*v + slot): slots shift locally within each pipe rank;
+            # the slot=0 column is fed by the previous rank's last slot —
+            # the only cross-pipe transfer, one collective-permute per tick
+            nxt = jnp.roll(out, 1, axis=1)
+            nxt = nxt.at[:, 0].set(jnp.roll(out[:, -1], 1, axis=0))
+            return keep(nxt), y
+
+        _, ys = jax.lax.scan(tick, buf, jnp.arange(m + S - 1))
+        return jax.lax.dynamic_slice_in_dim(ys, S - 1, m, axis=0)
+
+    return pipelined
+
+
 def stack_stages(stacked_layers: Any, n_stages: int) -> Any:
     """(L, ...) layer-stacked params -> (n_stages, L/p, ...)."""
     def reshape(a):
@@ -163,12 +256,19 @@ def stack_stages(stacked_layers: Any, n_stages: int) -> Any:
     return jax.tree.map(reshape, stacked_layers)
 
 
-def layer_stage_fn(layer_fn: Callable[[Any, jax.Array], jax.Array]):
-    """stage_fn that scans ``layer_fn`` over the stage's layer slice."""
+def layer_stage_fn(layer_fn: Callable[[Any, jax.Array], jax.Array],
+                   remat: bool = False):
+    """stage_fn that scans ``layer_fn`` over the stage's layer slice.
+
+    ``remat=True`` wraps each layer in ``jax.checkpoint`` — the same
+    activation-checkpointing policy as the non-pipelined layer stack in
+    ``models/model.py``.
+    """
     def stage(stage_params, x):
         def body(c, lp):
             return layer_fn(lp, c), None
-        y, _ = jax.lax.scan(body, x, stage_params)
+        y, _ = jax.lax.scan(jax.checkpoint(body) if remat else body,
+                            x, stage_params)
         return y
     return stage
 

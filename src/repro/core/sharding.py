@@ -61,7 +61,8 @@ class ShardingRules:
 
 
 def _base_rules(
-    *, data_axis: MeshAxis, model_axis: MeshAxis, extra: Mapping[str, MeshAxis] | None = None,
+    *, data_axis: MeshAxis, model_axis: MeshAxis, pipe_axis: MeshAxis = None,
+    extra: Mapping[str, MeshAxis] | None = None,
     name: str = "custom",
 ) -> ShardingRules:
     rules: dict[str, MeshAxis] = {
@@ -73,8 +74,10 @@ def _base_rules(
         "head_dim": None,
         "mlp": model_axis,
         "vocab": model_axis,
-        "layers": None,
-        "stage": "pipe",
+        # pipeline parallelism: the stacked-layer leading dim lives on the
+        # pipe axis, so the (pp, L/pp, ...) stage split is a local reshape
+        "layers": pipe_axis,
+        "stage": pipe_axis or "pipe",
         "experts": data_axis,
         "expert_mlp": model_axis,
         "ssm_heads": model_axis,
@@ -92,12 +95,15 @@ def _base_rules(
     return ShardingRules(rules=rules, name=name)
 
 
-def megatron_rules(data_axis: str = "data", model_axis: str = "model") -> ShardingRules:
+def megatron_rules(data_axis: str = "data", model_axis: str = "model",
+                   pipe_axis: MeshAxis = None) -> ShardingRules:
     """The paper's strategy: Megatron TP over `model`, DP (+ZeRO-1) over `data`."""
-    return _base_rules(data_axis=data_axis, model_axis=model_axis, name="megatron_tp")
+    return _base_rules(data_axis=data_axis, model_axis=model_axis,
+                       pipe_axis=pipe_axis, name="megatron_tp")
 
 
-def fsdp_rules(data_axis: str = "data", model_axis: str = "model") -> ShardingRules:
+def fsdp_rules(data_axis: str = "data", model_axis: str = "model",
+               pipe_axis: MeshAxis = None) -> ShardingRules:
     """ZeRO-3 / FSDP-style: parameters sharded over data on the embed dim too.
 
     This is the sharded-data-parallel baseline the paper compares against
@@ -107,18 +113,23 @@ def fsdp_rules(data_axis: str = "data", model_axis: str = "model") -> ShardingRu
     return _base_rules(
         data_axis=data_axis,
         model_axis=model_axis,
+        pipe_axis=pipe_axis,
         extra={"embed": data_axis},
         name="fsdp",
     )
 
 
-def dp_only_rules(data_axis: str = "data", model_axis: str | None = None) -> ShardingRules:
+def dp_only_rules(data_axis: str = "data", model_axis: str | None = None,
+                  pipe_axis: MeshAxis = None) -> ShardingRules:
     """Pure data parallelism (model replicated) -- the smallest-model regime."""
-    return _base_rules(data_axis=data_axis, model_axis=None, name="dp_only")
+    return _base_rules(data_axis=data_axis, model_axis=None,
+                       pipe_axis=pipe_axis, name="dp_only")
 
 
-def tp_only_rules(data_axis: str | None = None, model_axis: str = "model") -> ShardingRules:
-    return _base_rules(data_axis=None, model_axis=model_axis, name="tp_only")
+def tp_only_rules(data_axis: str | None = None, model_axis: str = "model",
+                  pipe_axis: MeshAxis = None) -> ShardingRules:
+    return _base_rules(data_axis=None, model_axis=model_axis,
+                       pipe_axis=pipe_axis, name="tp_only")
 
 
 PRESETS = {
@@ -134,11 +145,18 @@ PRESETS = {
 # ---------------------------------------------------------------------------
 
 def _axis_size(mesh: Mesh, axis: MeshAxis) -> int:
+    """Size of a (possibly composite) mesh axis; 0 if absent from ``mesh``.
+
+    Rules may name axes the current mesh does not carry (e.g. "pipe" on a 2D
+    (data, model) mesh) — those dims fall back to replication rather than
+    raising, so one rule table serves every mesh layout.
+    """
     if axis is None:
         return 1
-    if isinstance(axis, tuple):
-        return int(np.prod([mesh.shape[a] for a in axis]))
-    return mesh.shape[axis]
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    if any(a not in mesh.shape for a in axes):
+        return 0
+    return int(np.prod([mesh.shape[a] for a in axes]))
 
 
 def partition_spec(

@@ -27,7 +27,7 @@ from repro.analysis import roofline as rl
 from repro.configs import ASSIGNED, get_config
 from repro.configs.shapes import SHAPES, InputShape, applicable
 from repro.core import sharding as shd
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, mesh_for_plan
 from repro.models.common import axes_tree, shape_dtype_tree
 from repro.models.model import Model
 from repro.optim import AdamWConfig
@@ -61,6 +61,12 @@ def default_plan(multi_pod: bool, *, zero1: bool = True, gas: int = 1,
     )
 
 
+def plan_mesh_name(plan: TrainPlan, multi_pod: bool = False) -> str:
+    if plan.pp > 1:
+        return f"pipe{plan.pp}x{plan.dp}x{plan.tp}"
+    return "2x16x16" if multi_pod else "16x16"
+
+
 def lower_step(arch: str, shape_name: str, *, multi_pod: bool,
                plan: TrainPlan | None = None, q_chunk: int = 1024,
                cfg=None):
@@ -69,11 +75,18 @@ def lower_step(arch: str, shape_name: str, *, multi_pod: bool,
     cfg = cfg or get_config(arch)
     shape = SHAPES[shape_name]
     plan = plan or default_plan(multi_pod)
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if plan.pp > 1:
+        # 3D plan: the plan itself defines the ("pipe", "data", "model")
+        # mesh; validate against the real device count for a clear error
+        mesh = mesh_for_plan(plan)
+        mesh_name = plan_mesh_name(plan)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "2x16x16" if multi_pod else "16x16"
     chips = mesh.devices.size
     model = Model(cfg, jnp.bfloat16, q_chunk=q_chunk)
     meta = {"arch": arch, "shape": shape_name, "chips": chips,
-            "mesh": "2x16x16" if multi_pod else "16x16",
+            "mesh": mesh_name,
             "kind": shape.kind, "plan": plan.rules + ("+zero1" if plan.zero1 else ""),
             "gas": plan.gas}
 
@@ -112,7 +125,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
     cfg = cfg or get_config(arch)
     shape = SHAPES[shape_name]
     ok, reason = applicable(cfg, shape)
-    mesh_name = "2x16x16" if multi_pod else "16x16"
+    mesh_name = plan_mesh_name(plan or default_plan(multi_pod), multi_pod)
     if not ok:
         rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                "status": "skipped", "reason": reason}

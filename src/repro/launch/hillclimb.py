@@ -88,6 +88,22 @@ VARIANTS = {
                                ("mlp", None), ("act_heads", None),
                                ("act_mlp", None), ("seq", "model"))),
         note="dp attention + sequence sharded over the idle model axis"),
+    # 3D plans: real (dp, tp, pp) points of the paper's search space, run
+    # through the same unified executor (pipe axis replaces pod-as-DP)
+    "pp2_gas8": _v(
+        plan_fn=lambda p: dataclasses.replace(p, pp=2, dp=16, tp=16, gas=8),
+        note="2 pipeline stages x dp16 x tp16; gas=8 microbatches "
+             "saturate the pipe (bubble 1/9)"),
+    "pp4_gas8": _v(
+        plan_fn=lambda p: dataclasses.replace(p, pp=4, dp=8, tp=16, gas=8),
+        note="4 pipeline stages x dp8 x tp16 (deeper pipe, bubble 3/11)"),
+    "pp2_v2": _v(
+        plan_fn=lambda p: dataclasses.replace(p, pp=2, dp=16, tp=16, gas=8,
+                                              virtual_stages=2),
+        note="finer-grained pipe: 4 logical stages on 2 ranks (2x smaller "
+             "per-transfer activations, bubble 3/11 vs 1/9 — the comm-"
+             "granularity tradeoff; true interleaved-1F1B bubble shrinkage "
+             "is modeled analytically in core/bubble.py)"),
 }
 
 
@@ -125,7 +141,8 @@ def main():
     args = ap.parse_args()
     plan_matrix = {
         "qwen3": ["baseline", "pad_vocab256", "seq_shard", "gas4", "fsdp", "no_zero1",
-                  "moe_dp_attn+seq", "fsdp_seq"],
+                  "moe_dp_attn+seq", "fsdp_seq", "pp2_gas8", "pp4_gas8",
+                  "pp2_v2"],
         "qwen3_decode": ["baseline", "kv_int8"],
         "llama4_prefill": ["baseline", "seq_shard", "kv_int8"],
         "seamless": ["baseline", "pad_vocab256", "embed_replicated"],

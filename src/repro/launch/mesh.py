@@ -5,17 +5,36 @@ TPU v5e target: one pod = a 16x16 chip grid (256 chips); multi-pod = 2 pods
 TP inside the fast interconnect, DP (or PP) across the slow one — maps to
 TP on "model" (intra-pod ICI) and DP/PP on "data"/"pod".
 
+Axis conventions (the unified 3D executor, see runtime/train_loop.py):
+
+  * ``"pipe"``  — pipeline stages (slowest links; point-to-point ppermute)
+  * ``"data"``  — data parallel + ZeRO-1 optimizer-state sharding
+  * ``"model"`` — Megatron tensor parallel (fastest links)
+
 ``make_production_mesh`` is a *function* so importing this module never
 touches jax device state (the dry-run sets XLA_FLAGS before first jax use).
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+# Version-compat shim: jax >= 0.5 exposes jax.sharding.AxisType and
+# jax.make_mesh(..., axis_types=...); jax 0.4.x has neither.  All meshes in
+# this repo are Auto-typed, so falling back to the plain signature is exact.
+try:  # pragma: no cover - exercised implicitly by whichever jax is installed
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # jax < 0.5
+    _AxisType = None
 
 
 def _mesh(shape, axes):
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    if _AxisType is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(_AxisType.Auto,) * len(axes))
+        except TypeError:  # make_mesh predates axis_types kwarg
+            pass
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -29,6 +48,16 @@ def make_mesh_2d(data: int, model: int):
     return _mesh((data, model), ("data", "model"))
 
 
+def make_mesh_3d(pipe: int, data: int, model: int):
+    """The unified executor's 3D mesh: ("pipe", "data", "model").
+
+    Axis order is slowest-to-fastest interconnect: PP's point-to-point
+    transfers tolerate the slow links, DP/ZeRO-1 collectives the middle,
+    Megatron TP all-reduces need the fastest.
+    """
+    return _mesh((pipe, data, model), ("pipe", "data", "model"))
+
+
 def make_pipeline_mesh(pipe: int, data: int = 1):
     """Mesh for pipeline-parallel experiments: stages on the "pipe" axis."""
     return _mesh((pipe, data), ("pipe", "data"))
@@ -36,3 +65,30 @@ def make_pipeline_mesh(pipe: int, data: int = 1):
 
 def single_device_mesh():
     return _mesh((1, 1), ("data", "model"))
+
+
+def validate_plan_shape(pipe: int, data: int, model: int,
+                        n_devices: int | None = None) -> None:
+    """Raise a clear error when (pp, dp, tp) cannot tile the device count."""
+    for name, v in (("pp", pipe), ("dp", data), ("tp", model)):
+        if v < 1:
+            raise ValueError(f"--{name} must be >= 1, got {v}")
+    n = jax.device_count() if n_devices is None else n_devices
+    if pipe * data * model != n:
+        raise ValueError(
+            f"parallel plan pp={pipe} x dp={data} x tp={model} = "
+            f"{pipe * data * model} devices, but jax.device_count() = {n}. "
+            f"Pick factors whose product matches the device count "
+            f"(e.g. set XLA_FLAGS=--xla_force_host_platform_device_count={pipe * data * model}).")
+
+
+def mesh_for_plan(plan, n_devices: int | None = None, *, validate: bool = True):
+    """Build the 3D ("pipe", "data", "model") mesh a ParallelPlan asks for.
+
+    ``plan`` is any object with ``pp``/``dp``/``tp`` ints (a
+    :class:`repro.runtime.train_loop.ParallelPlan`).  pp == 1 still yields a
+    3D mesh with a size-1 pipe axis, so one executor covers every plan.
+    """
+    if validate:
+        validate_plan_shape(plan.pp, plan.dp, plan.tp, n_devices)
+    return make_mesh_3d(plan.pp, plan.dp, plan.tp)

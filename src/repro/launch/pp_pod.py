@@ -3,106 +3,44 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Cross-pod pipeline parallelism dry-run (paper §V: "PP across slow links").
 
-Multi-pod alternative to pod-as-outer-DP: the two pods become two pipeline
-stages (layers split in half); microbatches cross the pod boundary via
-``lax.ppermute`` (point-to-point, once per microbatch per direction — the
-communication pattern the paper recommends for the slowest links), while TP
-and DP stay inside each pod via GSPMD auto axes.
+Thin wrapper over the unified 3D executor: the two pods become the two
+ranks of the "pipe" mesh axis (layers split in half); microbatches cross
+the pod boundary via the pipeline's collective-permute (point-to-point,
+once per microbatch per direction — the communication pattern the paper
+recommends for the slowest links), while TP and DP stay inside each pod on
+the "model"/"data" axes.  Unlike the old standalone loss-only path, this
+lowers the full ``jit_train_step`` — gradient accumulation, ZeRO-1, and
+mixed precision included.
 
   PYTHONPATH=src python -m repro.launch.pp_pod --arch yi-6b --gas 8
 """
 import argparse
-import functools
 import json
 import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis import hlo_cost
 from repro.analysis import roofline as rl
 from repro.configs import get_config
 from repro.configs.shapes import SHAPES
-from repro.core import sharding as shd
-from repro.launch.mesh import make_production_mesh
-from repro.models import blocks
-from repro.models.model import Model, _chunked_cross_entropy
-from repro.runtime.train_loop import TrainPlan
+from repro.launch.dryrun import train_state_sds
+from repro.launch.mesh import mesh_for_plan
+from repro.models.model import Model
+from repro.optim import AdamWConfig
+from repro.runtime.train_loop import ParallelPlan, batch_specs, jit_train_step
 
 
-def build_pp_pod_loss(model: Model, mesh, *, gas: int):
-    """Pipelined LM loss: 2 stages over the 'pod' axis, TP/DP inside."""
-    cfg = model.cfg
-    p = mesh.shape["pod"]
-    perm = [(i, (i + 1) % p) for i in range(p)]
+def pp_pod_plan(*, gas: int, tp: int = 16, precision: str = "fp32") -> ParallelPlan:
+    """2 pods as 2 pipeline stages; TP/DP fill the 16x16 grid inside each.
 
-    def layer_fn(lp, x):
-        x = blocks.self_attn_block(lp["attn"], x, cfg, causal=True,
-                                   q_chunk=model.q_chunk)
-        return blocks.mlp_block(lp["mlp"], x, cfg)
-
-    def stage_fn(stage_params, x):
-        def body(c, lp):
-            return layer_fn(lp, c), None
-        y, _ = jax.lax.scan(jax.checkpoint(body), x, stage_params)
-        return y
-
-    def pipelined(stages, micro):
-        def inner(params_local, micro_all):
-            params_local = jax.tree.map(lambda a: a[0], params_local)
-            idx = jax.lax.axis_index("pod")
-            is_first = idx == 0
-            is_last = idx == p - 1
-            m = micro_all.shape[0]
-            T = m + p - 1
-            zero = jnp.zeros_like(micro_all[0])
-
-            def tick(recv, t):
-                mb = jnp.clip(t, 0, m - 1)
-                x0 = jax.lax.dynamic_index_in_dim(micro_all, mb, 0, keepdims=False)
-                inp = jnp.where(is_first, x0, recv)
-                out = stage_fn(params_local, inp)
-                nxt = jax.lax.ppermute(out, "pod", perm)
-                return nxt, out
-
-            _, ys = jax.lax.scan(tick, zero, jnp.arange(T))
-            outs = jax.lax.dynamic_slice_in_dim(ys, p - 1, m, axis=0)
-            outs = jnp.where(is_last, outs, 0)
-            # f32 psum: XLA CPU's AllReducePromotion check-fails on bf16 ARs
-            # in partially-manual computations (compiler bug workaround)
-            return jax.lax.psum(outs.astype(jnp.float32), "pod").astype(outs.dtype)
-
-        return jax.shard_map(
-            inner, mesh=mesh,
-            in_specs=(P("pod"), P()),
-            out_specs=P(),
-            axis_names={"pod"},   # only the pod axis is manual; TP/DP auto
-            check_vma=False,
-        )(stages, micro)
-
-    def loss(params, batch):
-        cparams = jax.tree.map(
-            lambda a: a.astype(model.compute_dtype)
-            if jnp.issubdtype(a.dtype, jnp.floating) else a, params)
-        tokens = batch["tokens"]
-        B, S = tokens.shape
-        x = jnp.take(cparams["embed"], tokens, axis=0).astype(model.compute_dtype)
-        mbs = B // gas
-        micro = x.reshape(gas, mbs, S, cfg.d_model)
-        stages = jax.tree.map(
-            lambda a: a.reshape(p, cfg.n_layers // p, *a.shape[1:]),
-            cparams["layers"])
-        h = pipelined(stages, micro).reshape(B, S, cfg.d_model)
-        from repro.models import layers as L
-        h = L.apply_norm(h, cparams["final_norm"], cfg.norm, cfg.rms_eps)
-        W = (cparams["embed"].T if cfg.tie_embeddings else cparams["lm_head"])
-        return _chunked_cross_entropy(
-            h[:, :-1], W.astype(model.compute_dtype), tokens[:, 1:],
-            jnp.ones_like(tokens[:, 1:], jnp.float32),
-            valid_vocab=cfg.vocab_size)
-
-    return loss
+    fp32 default on this host: XLA *CPU*'s AllReducePromotion pass
+    check-fails on some bf16 all-reduces — a host-compiler quirk, not a TPU
+    limitation; roofline byte terms are therefore 2x-pessimistic vs bf16.
+    """
+    return ParallelPlan(pp=2, dp=256 // tp, tp=tp, gas=gas,
+                        precision=precision, zero1=True)
 
 
 def main():
@@ -110,42 +48,22 @@ def main():
     ap.add_argument("--arch", default="yi-6b")
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--gas", type=int, default=8)
+    ap.add_argument("--tp", type=int, default=16)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     assert cfg.family == "dense", "pp-on-pod demo supports dense archs"
+    plan = pp_pod_plan(gas=args.gas, tp=args.tp)
+    mesh = mesh_for_plan(plan, n_devices=jax.device_count())
     shape = SHAPES[args.shape]
-    mesh = make_production_mesh(multi_pod=True)
-    # f32 compute: XLA *CPU*'s AllReducePromotion pass check-fails on bf16
-    # all-reduces inside partially-manual (shard_map axis subset) regions —
-    # a host-compiler bug, not a TPU limitation; roofline terms below are
-    # therefore 2x-pessimistic on bytes vs the bf16 TPU lowering.
     model = Model(cfg, jnp.float32)
-    plan = TrainPlan()  # TP over model, DP over data (inside each pod)
-    rules = plan.sharding_rules()
 
-    psds = model.param_shapes(jnp.float32)
-    psh = shd.tree_shardings(psds, model.param_axes(), mesh, rules)
-    # stage dim of the layer stack lives on the pod axis
-    def _stage_shard(sh, sds):
-        spec = list(sh.spec) + [None] * (len(sds.shape) - len(sh.spec))
-        return NamedSharding(mesh, P(*( ["pod"] + spec[1:] if len(spec) else ["pod"])))
-    psh = dict(psh)
-    psh["layers"] = jax.tree.map(
-        lambda sh, sds: NamedSharding(
-            mesh, P(*(("pod",) + tuple(sh.spec)[1:])))
-        if len(sds.shape) >= 1 else sh,
-        dict(psh)["layers"], psds["layers"])
-    bsds = {"tokens": jax.ShapeDtypeStruct(
-        (shape.global_batch, shape.seq_len), jnp.int32)}
-    bsh = {"tokens": shd.sharding_for(
-        (shape.global_batch, shape.seq_len), ("batch", "seq"), mesh, rules)}
-
-    loss = build_pp_pod_loss(model, mesh, gas=args.gas)
-    grad_fn = jax.jit(jax.value_and_grad(loss), in_shardings=(psh, bsh))
+    step = jit_train_step(model, AdamWConfig(), plan, mesh,
+                          shape.global_batch, shape.seq_len)
+    bsds, _ = batch_specs(cfg, shape.global_batch, shape.seq_len)
     t0 = time.time()
-    lowered = grad_fn.lower(psds, bsds)
+    lowered = step.lower(train_state_sds(model), bsds)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -154,7 +72,8 @@ def main():
     terms = rl.roofline_terms(totals.flops, totals.traffic_bytes,
                               totals.collective_total, 512)
     pperm = totals.collective_bytes.get("collective-permute", 0.0)
-    print(f"[ok] pp-on-pod {args.arch} x {args.shape} (2x16x16, gas={args.gas}): "
+    print(f"[ok] pp-on-pod {args.arch} x {args.shape} "
+          f"(pp2 x dp{plan.dp} x tp{plan.tp}, gas={args.gas}): "
           f"lower {t_lower:.1f}s compile {t_compile:.1f}s | "
           f"compute {terms.compute_s*1e3:.1f}ms mem {terms.memory_s*1e3:.1f}ms "
           f"coll {terms.collective_s*1e3:.1f}ms | "
@@ -164,7 +83,7 @@ def main():
         with open(args.out, "a") as f:
             f.write(json.dumps({
                 "tag": f"pp_pod:{args.arch}:{args.shape}:gas{args.gas}",
-                "status": "ok", "mesh": "2x16x16",
+                "status": "ok", "mesh": f"pipe2_data{plan.dp}_model{plan.tp}",
                 "roofline": terms.as_dict(),
                 "collective_bytes": {k: float(v) for k, v in
                                      totals.collective_bytes.items()},

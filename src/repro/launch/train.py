@@ -1,4 +1,4 @@
-"""Training launcher.
+"""Unified training launcher: one surface for any (dp, tp, pp) plan.
 
 On a real v5e deployment each host runs this under the TPU runtime and
 ``jax.distributed.initialize()`` wires the pod slice together; on this CPU
@@ -7,6 +7,11 @@ devices via XLA_FLAGS), with reduced configs for smoke-scale runs.
 
   PYTHONPATH=src python -m repro.launch.train --arch yi-6b --reduced \
       --steps 100 --global-batch 8 --seq-len 128 --ckpt-dir /tmp/ckpt
+
+  # pipeline-parallel point of the 3D space (4 virtual devices):
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --reduced \
+      --dp 2 --pp 2 --gas 4 --steps 10
 """
 from __future__ import annotations
 
@@ -15,14 +20,44 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpointing import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import ASSIGNED, PAPER, get_config
 from repro.data import SyntheticCorpus, make_batch_iterator
-from repro.launch.mesh import make_mesh_2d
+from repro.launch.mesh import mesh_for_plan
 from repro.models.model import Model
 from repro.optim import AdamWConfig, cosine_schedule
-from repro.runtime.train_loop import TrainPlan, init_train_state, jit_train_step
+from repro.runtime.train_loop import ParallelPlan, init_train_state, jit_train_step
+
+
+def parse_plan(args, n_devices: int) -> ParallelPlan:
+    """Resolve (dp, tp, pp) from CLI flags against the device count.
+
+    Unset factors are inferred so dp * tp * pp == n_devices; a plan that
+    cannot tile the device count is a hard error (not a silently invalid
+    mesh).
+    """
+    tp = args.tp if args.tp is not None else 1
+    pp = args.pp
+    if args.dp is not None:
+        dp = args.dp
+        if args.tp is None:
+            rem = n_devices // max(dp * pp, 1)
+            tp = max(rem, 1)
+    else:
+        rem = n_devices // max(tp * pp, 1)
+        dp = max(rem, 1)
+    plan = ParallelPlan(
+        dp=dp, tp=tp, pp=pp, virtual_stages=args.virtual_stages,
+        rules=args.rules, zero1=not args.no_zero1, gas=args.gas,
+        precision=args.precision)
+    if plan.n_devices != n_devices:
+        raise SystemExit(
+            f"error: dp={dp} x tp={tp} x pp={pp} = {plan.n_devices} devices "
+            f"but jax.device_count() = {n_devices}; adjust --dp/--tp/--pp "
+            f"(or XLA_FLAGS=--xla_force_host_platform_device_count=...)")
+    return plan
 
 
 def main() -> None:
@@ -39,8 +74,13 @@ def main() -> None:
     ap.add_argument("--rules", choices=["megatron_tp", "fsdp", "dp_only", "tp_only"],
                     default="megatron_tp")
     ap.add_argument("--no-zero1", action="store_true")
-    ap.add_argument("--data-parallel", type=int, default=None)
-    ap.add_argument("--model-parallel", type=int, default=None)
+    ap.add_argument("--dp", "--data-parallel", dest="dp", type=int, default=None,
+                    help="data-parallel ways (default: fill remaining devices)")
+    ap.add_argument("--tp", "--model-parallel", dest="tp", type=int, default=None,
+                    help="tensor-parallel ways")
+    ap.add_argument("--pp", type=int, default=1, help="pipeline stages")
+    ap.add_argument("--virtual-stages", type=int, default=1,
+                    help="interleaved virtual stages per pipe rank (pp > 1)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
@@ -51,15 +91,15 @@ def main() -> None:
     if args.reduced:
         cfg = cfg.reduced()
     n_dev = jax.device_count()
-    dp = args.data_parallel or n_dev
-    tp = args.model_parallel or (n_dev // dp)
-    mesh = make_mesh_2d(dp, max(tp, 1))
-    print(f"arch={cfg.name} params={Model(cfg).n_params():,} mesh=({dp},{tp}) "
-          f"rules={args.rules} zero1={not args.no_zero1} precision={args.precision}")
+    plan = parse_plan(args, n_dev)
+    mesh = mesh_for_plan(plan)
+    print(f"arch={cfg.name} params={Model(cfg).n_params():,} "
+          f"mesh=(pp={plan.pp},dp={plan.dp},tp={plan.tp})"
+          f"{f' v={plan.virtual_stages}' if plan.virtual_stages > 1 else ''} "
+          f"rules={plan.rules} zero1={plan.zero1} gas={plan.gas} "
+          f"precision={plan.precision}")
 
     model = Model(cfg, jnp.float32 if args.precision == "fp32" else jnp.bfloat16)
-    plan = TrainPlan(rules=args.rules, zero1=not args.no_zero1,
-                     gas=args.gas, precision=args.precision)
     opt = AdamWConfig(lr=cosine_schedule(args.lr, 10, args.steps))
     state = init_train_state(model, jax.random.PRNGKey(args.seed), opt, plan)
     start = 0
@@ -78,7 +118,7 @@ def main() -> None:
     it = make_batch_iterator(
         SyntheticCorpus(vocab_size=cfg.vocab_size, seed=args.seed),
         seq_len=args.seq_len, global_batch=args.global_batch,
-        extra_specs={k: (sh, __import__("numpy").dtype(dt)) for k, (sh, dt) in extra.items()} or None)
+        extra_specs={k: (sh, np.dtype(dt)) for k, (sh, dt) in extra.items()} or None)
 
     t0 = time.time()
     for i in range(start, args.steps):

@@ -267,9 +267,10 @@ class Model:
         W = self._unembed_matrix(params).astype(self.compute_dtype)
         return (h @ W).astype(jnp.float32)[..., :self.cfg.vocab_size]
 
-    def loss(self, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+    def _loss_from_hidden(self, params: dict, h: jax.Array, batch: dict,
+                          aux: jax.Array) -> tuple[jax.Array, dict]:
+        """Shared LM-loss tail: final-normed hidden states -> (loss, metrics)."""
         cfg = self.cfg
-        h, aux = self.hidden_states(params, batch)
         # keep the backward signal through the stack in compute dtype
         h = grad_cast(h, self.compute_dtype)
         if cfg.family == "vlm":
@@ -283,6 +284,56 @@ class Model:
                                     valid_vocab=self.cfg.vocab_size)
         total = ce + MOE_AUX_COEF * aux / max(cfg.n_layers, 1)
         return total, {"ce": ce, "moe_aux": aux}
+
+    def loss(self, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+        h, aux = self.hidden_states(params, batch)
+        return self._loss_from_hidden(params, h, batch, aux)
+
+    def loss_pipelined(self, params: dict, batch: dict, *, mesh: Any,
+                       pp: int, n_micro: int, virtual_stages: int = 1,
+                       pipe_axis: str = "pipe",
+                       data_axis: str = "data") -> tuple[jax.Array, dict]:
+        """Same objective as :meth:`loss`, with the layer stack run as a
+        ``pp``-stage (optionally ``virtual_stages``-interleaved) pipeline.
+
+        The batch is split into ``n_micro`` microbatches that flow through
+        :func:`repro.core.pipeline.pipeline_spmd`; embed / final norm / CE
+        head run on every pipe rank (they are tiny and stay TP/DP-sharded by
+        GSPMD exactly as in the non-pipelined path).  Mathematically
+        identical to :meth:`loss` — the pipeline is pure scheduling.
+        """
+        from repro.core import pipeline as pipe
+
+        cfg = self.cfg
+        if cfg.family not in ("dense", "vlm"):
+            raise NotImplementedError(
+                f"pipeline parallelism supports uniform layer stacks "
+                f"(dense/vlm), not family={cfg.family!r}")
+        n_stages = pp * virtual_stages
+        if cfg.n_layers % n_stages != 0:
+            raise ValueError(
+                f"n_layers={cfg.n_layers} not divisible by "
+                f"pp*virtual_stages={n_stages}")
+        cparams = _cast_floating(params, self.compute_dtype)
+        x = self._embed(cparams, batch)
+        B = x.shape[0]
+        if B % n_micro != 0:
+            raise ValueError(f"batch {B} not divisible by n_micro={n_micro}")
+
+        def layer_fn(lp, h):
+            h = blocks.self_attn_block(lp["attn"], h, cfg, causal=True,
+                                       q_chunk=self.q_chunk)
+            return blocks.mlp_block(lp["mlp"], h, cfg)
+
+        pipelined = pipe.pipeline_spmd(
+            pipe.layer_stage_fn(layer_fn, remat=True), mesh,
+            n_stages=pp, v=virtual_stages,
+            pipe_axis=pipe_axis, data_axis=data_axis)
+        micro = x.reshape(n_micro, B // n_micro, *x.shape[1:])
+        stages = pipe.stack_stages(cparams["layers"], n_stages)
+        h = pipelined(stages, micro).reshape(B, *x.shape[1:])
+        h = layers.apply_norm(h, cparams["final_norm"], cfg.norm, cfg.rms_eps)
+        return self._loss_from_hidden(params, h, batch, jnp.float32(0.0))
 
     # ------------------------------------------------------------------
     # Caches

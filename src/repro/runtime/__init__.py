@@ -1,5 +1,5 @@
 from repro.runtime.train_loop import (  # noqa: F401
-    TrainPlan, build_train_step, init_train_state, train_state_shardings,
-    batch_shardings, batch_specs,
+    ParallelPlan, TrainPlan, build_train_step, init_train_state,
+    train_state_shardings, batch_shardings, batch_specs,
 )
 from repro.runtime.serve_loop import build_decode_step, build_prefill  # noqa: F401

@@ -1,10 +1,26 @@
 """Training step builder: the paper's strategy knobs as one declarative plan.
 
-``TrainPlan`` carries exactly the hyperparameters the paper tunes
-(Tables III–V): the sharding strategy (tensor-parallel rules), ZeRO-1
-on/off, micro-batch size via gradient-accumulation steps (GAS), precision,
-and activation checkpointing (which is implicit: every layer stack is
-scanned under ``jax.checkpoint``).
+``ParallelPlan`` carries one point of the paper's full 3D search space
+(Tables III–V, Fig. 9): the parallel decomposition (``dp`` x ``tp`` x ``pp``
+with optional interleaved ``virtual_stages``), the sharding strategy
+(tensor-parallel rule preset), ZeRO-1 on/off, micro-batch count via
+gradient-accumulation steps (GAS), and precision.  Activation checkpointing
+is implicit: every layer stack is scanned under ``jax.checkpoint``.
+
+One ``jit_train_step`` serves every plan on the 3D
+``("pipe", "data", "model")`` mesh (``launch/mesh.py:mesh_for_plan``):
+
+  * ``pp == 1`` — the classic path: GAS microbatches scanned with fp32
+    gradient accumulation, TP via sharding rules, ZeRO-1 over "data".
+  * ``pp > 1``  — the same step, but the layer stack runs through the GSPMD
+    pipeline (``core/pipeline.py:pipeline_spmd``): the ``gas`` microbatches
+    become the pipeline's in-flight microbatches (the paper's knob that
+    saturates stages — bubble ``(pp-1)/(gas+pp-1)``, ``core/bubble.py``),
+    accumulated inside one backward pass.  ZeRO-1, loss scaling, and the
+    optimizer update are byte-identical between both paths.
+
+``TrainPlan`` remains as a thin alias for existing callers; a 2D plan is
+just ``ParallelPlan(pp=1)``.
 """
 from __future__ import annotations
 
@@ -23,19 +39,43 @@ from repro.optim import AdamWConfig, adamw_init, adamw_update
 
 
 @dataclasses.dataclass(frozen=True)
-class TrainPlan:
-    """One point in the paper's hyperparameter space."""
+class ParallelPlan:
+    """One point in the paper's 3D (dp, tp, pp) hyperparameter space."""
+    dp: int = 1                     # data-parallel ways ("data" mesh axis)
+    tp: int = 1                     # tensor-parallel ways ("model" mesh axis)
+    pp: int = 1                     # pipeline stages ("pipe" mesh axis)
+    virtual_stages: int = 1         # extra stage granularity per pipe rank
+                                    # (pp*v logical stages; see pipeline_spmd)
     rules: str = "megatron_tp"      # sharding strategy preset
     zero1: bool = True              # ZeRO-1 optimizer-state sharding
     gas: int = 1                    # gradient accumulation steps
+                                    # (== pipeline microbatches when pp > 1)
     precision: str = "bf16"         # bf16 | fp16 | fp32
     data_axis: str = "data"
+    model_axis: str = "model"
+    pipe_axis: str = "pipe"
     extra_dp_axes: tuple[str, ...] = ()   # e.g. ("pod",) in multi-pod mode
     # hillclimbing hook: ((logical_axis, mesh_axis|None), ...) rule overrides
     rule_overrides: tuple = ()
 
+    def __post_init__(self):
+        for name in ("dp", "tp", "pp", "virtual_stages", "gas"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"{name} must be >= 1, got {getattr(self, name)}")
+
+    @property
+    def n_devices(self) -> int:
+        return self.dp * self.tp * self.pp
+
+    @property
+    def n_stages(self) -> int:
+        """Logical pipeline depth (interleaving included)."""
+        return self.pp * self.virtual_stages
+
     def sharding_rules(self) -> shd.ShardingRules:
-        rules = shd.PRESETS[self.rules](data_axis=self.data_axis)
+        preset = shd.PRESETS[self.rules]
+        rules = preset(data_axis=self.data_axis,
+                       pipe_axis=self.pipe_axis if self.pp > 1 else None)
         if self.extra_dp_axes:
             batch_axes = tuple(self.extra_dp_axes) + (self.data_axis,)
             rules = rules.with_overrides(
@@ -46,11 +86,16 @@ class TrainPlan:
         return rules
 
 
+# Backwards-compatible name: the pre-3D plan (TP/DP/ZeRO-1 only) is the
+# pp == 1 corner of ParallelPlan.
+TrainPlan = ParallelPlan
+
+
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
-def train_state_shardings(model: Model, mesh: Mesh, plan: TrainPlan) -> dict:
+def train_state_shardings(model: Model, mesh: Mesh, plan: ParallelPlan) -> dict:
     pshapes = model.param_shapes()
     rules = plan.sharding_rules()
     psh = shd.tree_shardings(pshapes, model.param_axes(), mesh, rules)
@@ -83,13 +128,13 @@ def batch_specs(cfg: ModelConfig, global_batch: int, seq_len: int) -> tuple[dict
 
 
 def batch_shardings(cfg: ModelConfig, global_batch: int, seq_len: int,
-                    mesh: Mesh, plan: TrainPlan) -> dict:
+                    mesh: Mesh, plan: ParallelPlan) -> dict:
     specs, axes = batch_specs(cfg, global_batch, seq_len)
     return shd.tree_shardings(specs, axes, mesh, plan.sharding_rules())
 
 
 def init_train_state(model: Model, key: jax.Array, opt_cfg: AdamWConfig,
-                     plan: TrainPlan) -> dict:
+                     plan: ParallelPlan) -> dict:
     params = model.init(key)
     return {
         "params": params,
@@ -99,18 +144,35 @@ def init_train_state(model: Model, key: jax.Array, opt_cfg: AdamWConfig,
     }
 
 
-def build_train_step(model: Model, opt_cfg: AdamWConfig, plan: TrainPlan):
+def build_train_step(model: Model, opt_cfg: AdamWConfig, plan: ParallelPlan,
+                     mesh: Mesh | None = None):
     """Returns train_step(state, batch) -> (state, metrics).
 
-    The global batch is split into ``gas`` microbatches consumed by a
-    ``lax.scan`` that accumulates fp32 gradients — the paper's
-    gradient-accumulation knob (and what saturates pipeline stages)."""
+    pp == 1: the global batch is split into ``gas`` microbatches consumed by
+    a ``lax.scan`` that accumulates fp32 gradients — the paper's
+    gradient-accumulation knob.
+
+    pp > 1: the ``gas`` microbatches instead flow through the GSPMD pipeline
+    inside a single value_and_grad (grads over the summed-loss graph are the
+    same mean over microbatches, accumulated by the pipeline's backward), so
+    GAS doubles as the pipeline-saturation knob exactly as in the paper.
+    """
     policy = prec.policy_from_name(plan.precision)
     model = Model(model.cfg, policy.compute_dtype, model.q_chunk)
-    gas = plan.gas
+    if plan.pp > 1 and mesh is None:
+        raise ValueError("pp > 1 requires the mesh at build time "
+                         "(pipeline sharding constraints)")
+    # pp > 1 folds all gas microbatches into one pipelined backward pass
+    outer_gas = 1 if plan.pp > 1 else plan.gas
 
     def loss_fn(params, micro_batch, scale):
-        loss, metrics = model.loss(params, micro_batch)
+        if plan.pp > 1:
+            loss, metrics = model.loss_pipelined(
+                params, micro_batch, mesh=mesh, pp=plan.pp,
+                n_micro=plan.gas, virtual_stages=plan.virtual_stages,
+                pipe_axis=plan.pipe_axis, data_axis=plan.data_axis)
+        else:
+            loss, metrics = model.loss(params, micro_batch)
         return prec.scale_loss({"scale": scale}, loss), metrics
 
     def train_step(state, batch):
@@ -118,7 +180,7 @@ def build_train_step(model: Model, opt_cfg: AdamWConfig, plan: TrainPlan):
         scale = state["loss_scale"]["scale"]
 
         def split(x):
-            return x.reshape(gas, x.shape[0] // gas, *x.shape[1:])
+            return x.reshape(outer_gas, x.shape[0] // outer_gas, *x.shape[1:])
 
         micro = jax.tree.map(split, batch)
         zero_grads = jax.tree.map(
@@ -135,14 +197,14 @@ def build_train_step(model: Model, opt_cfg: AdamWConfig, plan: TrainPlan):
             accum, (zero_grads, jnp.float32(0.0), jnp.float32(0.0)), micro)
 
         grads = prec.unscale_grads(state["loss_scale"],
-                                   jax.tree.map(lambda g: g / gas, gsum))
+                                   jax.tree.map(lambda g: g / outer_gas, gsum))
         finite = prec.all_finite(grads)
         new_params, new_opt = adamw_update(
             opt_cfg, params, grads, state["opt"], skip=~finite)
         new_ls = prec.update_loss_scale(state["loss_scale"], finite)
         metrics = {
-            "loss": ce_sum / gas,
-            "moe_aux": aux_sum / gas,
+            "loss": ce_sum / outer_gas,
+            "moe_aux": aux_sum / outer_gas,
             "grads_finite": finite,
             "loss_scale": new_ls["scale"],
         }
@@ -157,10 +219,15 @@ def build_train_step(model: Model, opt_cfg: AdamWConfig, plan: TrainPlan):
     return train_step
 
 
-def jit_train_step(model: Model, opt_cfg: AdamWConfig, plan: TrainPlan,
+def jit_train_step(model: Model, opt_cfg: AdamWConfig, plan: ParallelPlan,
                    mesh: Mesh, global_batch: int, seq_len: int):
-    """jit-compiled train step with explicit in/out shardings for ``mesh``."""
-    step = build_train_step(model, opt_cfg, plan)
+    """jit-compiled unified train step with explicit in/out shardings.
+
+    This is the single executor behind every (dp, tp, pp) plan: TP via the
+    plan's sharding rules, PP via ``pipeline_spmd`` in the loss, ZeRO-1 via
+    data-axis optimizer-state shardings, all under one jit.
+    """
+    step = build_train_step(model, opt_cfg, plan, mesh)
     state_sh = train_state_shardings(model, mesh, plan)
     batch_sh = batch_shardings(model.cfg, global_batch, seq_len, mesh, plan)
     rep = replicated(mesh)
