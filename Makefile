@@ -5,10 +5,12 @@
 #                 in the container; compileall catches parse errors)
 #   make smoke  - 1-step reduced train run of a pp=2 ParallelPlan on 4
 #                 virtual devices: proves the unified 3D executor end-to-end
+#   make bench  - smoke-sized (remat x kernels x plan) train-step benchmark;
+#                 writes + schema-validates BENCH_train_step.json
 
 PY := python
 
-.PHONY: test lint smoke
+.PHONY: test lint smoke bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -21,3 +23,9 @@ smoke:
 	$(PY) -m repro.launch.train --arch yi-6b --reduced \
 	    --dp 2 --pp 2 --gas 2 --steps 1 --global-batch 8 --seq-len 64 \
 	    --log-every 1
+
+bench:
+	PYTHONPATH=src $(PY) benchmarks/bench_train_step.py --devices 2 \
+	    --out BENCH_train_step.json
+	PYTHONPATH=src $(PY) benchmarks/bench_train_step.py \
+	    --validate BENCH_train_step.json

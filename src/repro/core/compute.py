@@ -1,0 +1,117 @@
+"""ComputePolicy: the compute-path knobs of the paper's search space.
+
+The paper attributes a large share of its 31-38% GPU throughput to two
+compute-path choices made *orthogonally* to the (dp, tp, pp) decomposition:
+Flash-Attention 2 and activation checkpointing (its explicit memory/recompute
+knobs).  The distributed-training survey (Duan et al., 2407.20018) frames the
+full space as recompute policy x fused kernels x parallel plan, so these
+knobs live on :class:`~repro.runtime.train_loop.ParallelPlan` (as a nested
+``ComputePolicy``) and flow through the executor, HPO, and the hillclimber
+rather than being per-file constants.
+
+Two knobs:
+
+  * ``remat`` — what the layer-stack scans save for the backward pass:
+      - ``"full"``      — ``jax.checkpoint`` on every scan body: only layer
+        boundaries are saved, everything inside is recomputed (the seed
+        repo's hard-coded behaviour; minimum memory, maximum recompute).
+      - ``"selective"`` — ``jax.checkpoint`` with
+        ``dots_with_no_batch_dims_saveable``: matmul outputs are saved, so
+        the backward skips recomputing the heavy dots (QKV/O projections,
+        MLP matmuls) and only re-runs the cheap elementwise/norm chains.
+        The paper's "selective recompute" point: most of full-remat's memory
+        saving at a fraction of its recompute FLOPs.
+      - ``"none"``      — no rematerialization: every intermediate is saved
+        (maximum memory, zero recompute — the fastest point when it fits).
+    Two scans are exempt from the knob and stay full-checkpointed always:
+    the attention q-chunk scan and the chunked-CE loss tail — their
+    recompute is what keeps the O(Sq x Skv) scores / (N, V) logits from
+    ever materializing, which no remat mode should undo.
+  * ``kernels`` — route norm / MLP-gate / attention / cross-entropy through
+    the fused Pallas kernels in ``repro.kernels`` (interpret-mode on CPU,
+    Mosaic on TPU) instead of the jnp reference formulations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+REMAT_MODES = ("full", "selective", "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputePolicy:
+    """Compute-path policy carried by a ParallelPlan (hashable, frozen)."""
+    remat: str = "full"        # full | selective | none
+    kernels: bool = False      # fused Pallas fast path on the train path
+
+    def __post_init__(self):
+        if self.remat not in REMAT_MODES:
+            raise ValueError(
+                f"remat must be one of {REMAT_MODES}, got {self.remat!r}")
+
+    def checkpoint(self, fn: Callable) -> Callable:
+        """Policy-driven replacement for the hard-coded ``jax.checkpoint``
+        wrappers around layer-stack scan bodies."""
+        if self.remat == "full":
+            return jax.checkpoint(fn)
+        if self.remat == "selective":
+            return jax.checkpoint(
+                fn,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        return fn
+
+
+DEFAULT_POLICY = ComputePolicy()
+
+
+def resolve(policy: "ComputePolicy | None") -> ComputePolicy:
+    """None -> the seed-equivalent default (full remat, jnp compute path)."""
+    return DEFAULT_POLICY if policy is None else policy
+
+
+# ---------------------------------------------------------------------------
+# Analytic activation-memory estimate (the paper's Table III axis): what each
+# remat mode saves per layer for the backward pass, per device.  Used by the
+# dry-run to put XLA's measured peak next to a closed-form expectation.
+# ---------------------------------------------------------------------------
+
+def activation_bytes_estimate(cfg: Any, global_batch: int, seq_len: int,
+                              policy: ComputePolicy, *,
+                              dp: int = 1, tp: int = 1, pp: int = 1,
+                              gas: int = 1, dtype_bytes: int = 2) -> int:
+    """Per-device bytes of saved (not recomputed) activations for one
+    microbatch's backward through the layer stack.
+
+    Counts only the dominant per-layer tensors of a dense block; attention
+    score matrices are excluded (the flash/chunked formulations never save
+    them).  MoE/SSM/RWKV stacks reuse the dense estimate of their matmul
+    skeleton — a lower bound, clearly labeled as such by the caller.
+    """
+    tokens = (global_batch // max(dp * gas, 1)) * seq_len  # per-device microbatch
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    q_cols = cfg.n_heads * hd
+    kv_cols = cfg.n_kv_heads * hd
+    ff = cfg.d_ff
+    layers_local = cfg.n_layers // max(pp, 1)
+
+    boundary = d                                   # the scan carry (x)
+    # matmul outputs inside one block: q, k, v, attn-out, o-proj,
+    # w1/w3 gate halves, w2 out
+    dots = (q_cols + 2 * kv_cols + q_cols + d) + (2 * ff + d)
+    # elementwise/norm chains saved only under remat="none": the two norm
+    # outputs feeding the projections plus the silu*gate product
+    elementwise = 2 * d + ff
+
+    if policy.remat == "full":
+        per_layer = boundary
+    elif policy.remat == "selective":
+        per_layer = boundary + dots
+    else:
+        per_layer = boundary + dots + elementwise
+    # TP shards the head/mlp dims of the saved dots
+    sharded = boundary + (per_layer - boundary) / max(tp, 1)
+    return int(tokens * sharded * layers_local * dtype_bytes)

@@ -34,18 +34,27 @@ SPACE_175B = (
     Param("nnodes", (12, 16)),
 )
 
+# the compute-path axes (Duan et al. 2407.20018's third dimension of the
+# search space): recompute policy x fused kernels, searched jointly with
+# the (dp, tp, pp) decomposition
+SPACE_COMPUTE = SPACE_175B + (
+    Param("remat", ("full", "selective", "none")),
+    Param("kernels", (0, 1)),
+)
+
 
 def trial_plan(config: dict, *, gpus_per_node: int = 8,
                rules: str = "megatron_tp", precision: str = "bf16"):
     """Concretize one search-space config into a real 3D ``ParallelPlan``.
 
-    The search enumerates (pp, tp, gas, zero1, nnodes); dp is whatever
-    tiles the remaining devices (``nnodes * gpus_per_node / (tp * pp)``) —
-    exactly the paper's decomposition.  Returns ``None`` when the config
-    cannot tile the device count (the F-objective failure case: callers
-    penalize it below every success so the surrogate learns to avoid it).
-    ``mbs`` stays a cost-model knob: the executor derives the microbatch
-    size from global_batch / gas.
+    The search enumerates (pp, tp, gas, zero1, nnodes) plus the compute-path
+    knobs (remat, kernels); dp is whatever tiles the remaining devices
+    (``nnodes * gpus_per_node / (tp * pp)``) — exactly the paper's
+    decomposition.  Returns ``None`` when the config cannot tile the device
+    count (the F-objective failure case: callers penalize it below every
+    success so the surrogate learns to avoid it).  ``mbs`` stays a
+    cost-model knob: the executor derives the microbatch size from
+    global_batch / gas.
     """
     from repro.runtime.train_loop import ParallelPlan  # lazy: hpo stays numpy-only
 
@@ -56,7 +65,9 @@ def trial_plan(config: dict, *, gpus_per_node: int = 8,
     return ParallelPlan(
         dp=world // (tp * pp), tp=tp, pp=pp,
         gas=int(config.get("gas", 1)), zero1=bool(config.get("zero1", True)),
-        rules=rules, precision=precision)
+        rules=rules, precision=precision,
+        remat=str(config.get("remat", "full")),
+        kernels=bool(config.get("kernels", 0)))
 
 
 def plan_objective(plan_fn, *, gpus_per_node: int = 8, fail_value: float = -1.0):
@@ -103,9 +114,13 @@ class SearchResult:
 def _encode(space: Sequence[Param], config: dict) -> np.ndarray:
     x = []
     for p in space:
-        vals = np.asarray(p.values, dtype=float)
-        v = float(config[p.name])
-        x.append((v - vals.min()) / max(vals.max() - vals.min(), 1e-9))
+        v = config[p.name]
+        try:
+            vals = np.asarray(p.values, dtype=float)
+            x.append((float(v) - vals.min()) / max(vals.max() - vals.min(), 1e-9))
+        except (TypeError, ValueError):
+            # categorical axis (e.g. remat mode): encode by choice index
+            x.append(p.values.index(v) / max(len(p.values) - 1, 1))
     return np.asarray(x)
 
 

@@ -257,18 +257,26 @@ def stack_stages(stacked_layers: Any, n_stages: int) -> Any:
 
 
 def layer_stage_fn(layer_fn: Callable[[Any, jax.Array], jax.Array],
-                   remat: bool = False):
+                   remat: bool = False, *, policy: Any = None):
     """stage_fn that scans ``layer_fn`` over the stage's layer slice.
 
-    ``remat=True`` wraps each layer in ``jax.checkpoint`` — the same
-    activation-checkpointing policy as the non-pipelined layer stack in
-    ``models/model.py``.
+    ``policy`` (a :class:`repro.core.compute.ComputePolicy`) drives the
+    per-layer rematerialization — the same selectable activation-checkpoint
+    policy as the non-pipelined layer stack in ``models/model.py``.  The
+    legacy ``remat=True`` flag is equivalent to the default "full" policy.
     """
+    if policy is not None:
+        wrap = policy.checkpoint
+    elif remat:
+        wrap = jax.checkpoint
+    else:
+        def wrap(fn):
+            return fn
+
     def stage(stage_params, x):
         def body(c, lp):
             return layer_fn(lp, c), None
-        y, _ = jax.lax.scan(jax.checkpoint(body) if remat else body,
-                            x, stage_params)
+        y, _ = jax.lax.scan(wrap(body), x, stage_params)
         return y
     return stage
 

@@ -8,8 +8,10 @@ CE analogue of flash attention's online softmax.
 
 Grid = (n_token_blocks, n_vocab_blocks); the vocab loop is minor-most so the
 running stats live in VMEM scratch.  Returns (lse, label_logit) per token;
-loss = lse - label_logit.  Backward recomputes via the chunked jnp path
-(models/model.py), so the kernel is wrapped with a custom_vjp.
+loss = lse - label_logit.  :func:`cross_entropy_tokens` wraps the kernel in a
+``custom_vjp`` whose backward recomputes logits in token chunks from the
+saved lse (p = exp(logits - lse)), so neither direction ever materializes the
+full (N, V) tensor — this is what puts the kernel on the training path.
 """
 from __future__ import annotations
 
@@ -17,6 +19,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -108,8 +111,52 @@ def _fit(block: int, n: int) -> int:
     return b
 
 
-def cross_entropy(h, w, labels, valid_vocab=None, interpret=False):
-    """Mean CE loss over tokens; logits stay in VMEM."""
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def cross_entropy_tokens(h, w, labels, valid_vocab=None, interpret=False):
+    """Per-token CE losses (N,) fp32; differentiable w.r.t. h and w.
+
+    Per-token (instead of mean) so callers can apply loss masks and their
+    own normalization outside the kernel."""
     lse, ylogit = ce_logsumexp_pallas(h, w, labels, valid_vocab=valid_vocab,
                                       interpret=interpret)
-    return jnp.mean(lse - ylogit)
+    return lse - ylogit
+
+
+def _ce_tokens_fwd(h, w, labels, valid_vocab, interpret):
+    lse, ylogit = ce_logsumexp_pallas(h, w, labels, valid_vocab=valid_vocab,
+                                      interpret=interpret)
+    return lse - ylogit, (h, w, labels, lse)
+
+
+def _ce_tokens_bwd(valid_vocab, interpret, res, g):
+    h, w, labels, lse = res
+    N, d = h.shape
+    V = w.shape[1]
+    vv = valid_vocab or V
+    w32 = w.astype(jnp.float32)
+    chunk = _fit(DEFAULT_BLOCK_N, N)
+    nc = N // chunk
+
+    def body(dw, xs):
+        hb, yb, lseb, gb = xs
+        logits = hb.astype(jnp.float32) @ w32                  # (chunk, V)
+        if vv < V:
+            logits = jnp.where(jnp.arange(V)[None, :] >= vv, NEG_INF, logits)
+        p = jnp.exp(logits - lseb[:, None])                    # softmax via saved lse
+        dlogits = (p - jax.nn.one_hot(yb, V, dtype=jnp.float32)) * gb[:, None]
+        dh = dlogits @ w32.T
+        return dw + hb.astype(jnp.float32).T @ dlogits, dh
+
+    xs = (h.reshape(nc, chunk, d), labels.reshape(nc, chunk),
+          lse.reshape(nc, chunk), g.reshape(nc, chunk).astype(jnp.float32))
+    dw, dhs = jax.lax.scan(body, jnp.zeros((d, V), jnp.float32), xs)
+    return (dhs.reshape(N, d).astype(h.dtype), dw.astype(w.dtype),
+            np.zeros(labels.shape, jax.dtypes.float0))
+
+
+cross_entropy_tokens.defvjp(_ce_tokens_fwd, _ce_tokens_bwd)
+
+
+def cross_entropy(h, w, labels, valid_vocab=None, interpret=False):
+    """Mean CE loss over tokens; logits stay in VMEM.  Differentiable."""
+    return jnp.mean(cross_entropy_tokens(h, w, labels, valid_vocab, interpret))

@@ -13,6 +13,13 @@ softmax state (m, l, acc) lives in VMEM scratch across those steps.
 
 Causal + sliding-window masking is applied in-kernel; fully-masked K blocks
 are skipped with ``pl.when`` (no MXU work issued).
+
+GQA is native: K/V carry their ``Hkv`` heads unreplicated and the BlockSpec
+index maps route query head ``h`` to KV head ``h // G`` — no ``jnp.repeat``
+materializing G copies of the KV tensors (fwd, residuals, and dq all stream
+the shared blocks).  dK/dV accumulate over the group inside the kernel by
+folding the G query heads into the minor-most grid dims, so the gradients
+also come out at ``Hkv`` heads.
 """
 from __future__ import annotations
 
@@ -94,10 +101,17 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
         lse_ref[0, 0] = m_ref[...] + jnp.log(safe_l)
 
 
+def _group_size(q, k) -> int:
+    Hq, Hkv = q.shape[1], k.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    return Hq // Hkv
+
+
 def flash_attention_fwd(q, k, v, *, causal, window, q_offset,
                         block_q, block_k, interpret):
     B, H, Sq, hd = q.shape
     Skv = k.shape[2]
+    g = _group_size(q, k)
     block_q = min(block_q, Sq)
     block_k = min(block_k, Skv)
     assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, block_q, Skv, block_k)
@@ -113,8 +127,10 @@ def flash_attention_fwd(q, k, v, *, causal, window, q_offset,
         grid=(B, H, nq, nk),
         in_specs=[
             pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, i, j: (b, h, j, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j: (b, h // g, j, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
@@ -192,11 +208,15 @@ def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
 
 def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
                     dk_ref, dv_ref, dk_acc, dv_acc, *,
-                    scale, causal, window, block_q, block_k, nq, q_offset):
+                    scale, causal, window, block_q, block_k, nq, ng, q_offset):
+    # grid (B, Hkv, nk, G, nq): the G query heads sharing this KV head are the
+    # second-minor grid dim, so dk/dv accumulate over the whole group in VMEM
+    # scratch and the gradients come out unreplicated at Hkv heads.
     ik = pl.program_id(2)
-    iq = pl.program_id(3)
+    ig = pl.program_id(3)
+    iq = pl.program_id(4)
 
-    @pl.when(iq == 0)
+    @pl.when((iq == 0) & (ig == 0))
     def _init():
         dk_acc[...] = jnp.zeros_like(dk_acc)
         dv_acc[...] = jnp.zeros_like(dv_acc)
@@ -239,7 +259,7 @@ def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
             ds, q, (((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32) * scale
 
-    @pl.when(iq == nq - 1)
+    @pl.when((iq == nq - 1) & (ig == ng - 1))
     def _finish():
         dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
         dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
@@ -248,7 +268,8 @@ def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 def flash_attention_bwd(q, k, v, out, lse, do, *, causal, window, q_offset,
                         block_q, block_k, interpret):
     B, H, Sq, hd = q.shape
-    Skv = k.shape[2]
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = _group_size(q, k)
     block_q = min(block_q, Sq)
     block_k = min(block_k, Skv)
     nq, nk = Sq // block_q, Skv // block_k
@@ -262,8 +283,10 @@ def flash_attention_bwd(q, k, v, out, lse, do, *, causal, window, q_offset,
         grid=(B, H, nq, nk),
         in_specs=[
             pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, i, j: (b, h, j, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j: (b, h // g, j, 0)),
             pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
             pl.BlockSpec((1, 1, block_q), lambda b, h, i, j: (b, h, i)),
             pl.BlockSpec((1, 1, block_q), lambda b, h, i, j: (b, h, i)),
@@ -274,22 +297,33 @@ def flash_attention_bwd(q, k, v, out, lse, do, *, causal, window, q_offset,
         interpret=interpret,
     )(q, k, v, do, lse, delta)
 
+    # grid (B, Hkv, nk, G, nq): query head = kvh * G + ig for the q-side
+    # operands; dk/dv blocks are revisited only across the two minor-most
+    # dims, so the VMEM accumulators carry the whole group reduction
     dk, dv = pl.pallas_call(
         functools.partial(_bwd_dkv_kernel, scale=scale, causal=causal,
                           window=window, block_q=block_q, block_k=block_k,
-                          nq=nq, q_offset=q_offset),
-        grid=(B, H, nk, nq),
+                          nq=nq, ng=g, q_offset=q_offset),
+        grid=(B, Hkv, nk, g, nq),
         in_specs=[
-            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, j, i: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, j, i: (b, h, j, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, j, i: (b, h, j, 0)),
-            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, j, i: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, block_q), lambda b, h, j, i: (b, h, i)),
-            pl.BlockSpec((1, 1, block_q), lambda b, h, j, i: (b, h, i)),
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, j, gg, i: (b, h * g + gg, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, j, gg, i: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, j, gg, i: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, j, gg, i: (b, h * g + gg, i, 0)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda b, h, j, gg, i: (b, h * g + gg, i)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda b, h, j, gg, i: (b, h * g + gg, i)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, j, i: (b, h, j, 0)),
-            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, j, i: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, j, gg, i: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, j, gg, i: (b, h, j, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct(k.shape, k.dtype),
@@ -312,7 +346,8 @@ def flash_attention_bwd(q, k, v, out, lse, do, *, causal, window, q_offset,
 def flash_attention(q, k, v, causal=True, window=None, q_offset=0,
                     block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
                     interpret=False):
-    """q/k/v: (B, H, S, hd) — same head counts (GQA handled by ops.py)."""
+    """q: (B, Hq, Sq, hd); k/v: (B, Hkv, Skv, hd) with Hq % Hkv == 0 — GQA
+    KV heads stay unreplicated (shared blocks via the grid index maps)."""
     out, _ = flash_attention_fwd(q, k, v, causal=causal, window=window,
                                  q_offset=q_offset, block_q=block_q,
                                  block_k=block_k, interpret=interpret)

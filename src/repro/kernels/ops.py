@@ -2,8 +2,10 @@
 
 On CPU (this container) the kernels execute in interpret mode — the kernel
 body runs in Python for correctness validation against ``ref.py``; on TPU
-they lower via Mosaic.  GQA is handled here (the kernels see equal head
-counts), as are layout conversion and seq padding to block multiples.
+they lower via Mosaic.  Layout conversion and block fitting happen here; GQA
+is native to the flash kernel (KV heads stay unreplicated — the kernel's
+grid index maps share each KV block across its G query heads, instead of the
+old ``jnp.repeat`` that materialized G full copies of K/V).
 """
 from __future__ import annotations
 
@@ -37,13 +39,10 @@ def flash_attention(
         interpret = _on_cpu()
     B, Sq, Hq, hd = q.shape
     _, Skv, Hkv, _ = k.shape
-    G = Hq // Hkv
+    assert Hq % Hkv == 0, (Hq, Hkv)
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    if G > 1:
-        kt = jnp.repeat(kt, G, axis=1)
-        vt = jnp.repeat(vt, G, axis=1)
     bq = _fit_block(block_q, Sq)
     bk = _fit_block(block_k, Skv)
     out = fa.flash_attention(qt, kt, vt, causal, sliding_window, q_offset,
@@ -74,6 +73,17 @@ def cross_entropy(h: jax.Array, w: jax.Array, labels: jax.Array,
         interpret = _on_cpu()
     return ce.cross_entropy(h, w, labels, valid_vocab=valid_vocab,
                             interpret=interpret)
+
+
+def cross_entropy_tokens(h: jax.Array, w: jax.Array, labels: jax.Array,
+                         valid_vocab: int | None = None,
+                         interpret: bool | None = None) -> jax.Array:
+    """Per-token CE losses (N,) fp32 — the train-path entry point (callers
+    apply their own loss mask / normalization).  Differentiable."""
+    from repro.kernels import cross_entropy as ce
+    if interpret is None:
+        interpret = _on_cpu()
+    return ce.cross_entropy_tokens(h, w, labels, valid_vocab, interpret)
 
 
 def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array,

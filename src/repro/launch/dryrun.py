@@ -26,6 +26,7 @@ from repro.analysis import hlo_cost
 from repro.analysis import roofline as rl
 from repro.configs import ASSIGNED, get_config
 from repro.configs.shapes import SHAPES, InputShape, applicable
+from repro.core import compute as cmp
 from repro.core import sharding as shd
 from repro.launch.mesh import make_production_mesh, mesh_for_plan
 from repro.models.common import axes_tree, shape_dtype_tree
@@ -79,19 +80,30 @@ def lower_step(arch: str, shape_name: str, *, multi_pod: bool,
         # 3D plan: the plan itself defines the ("pipe", "data", "model")
         # mesh; validate against the real device count for a clear error
         mesh = mesh_for_plan(plan)
-        mesh_name = plan_mesh_name(plan)
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
-        mesh_name = "2x16x16" if multi_pod else "16x16"
+    mesh_name = plan_mesh_name(plan, multi_pod)
     chips = mesh.devices.size
-    model = Model(cfg, jnp.bfloat16, q_chunk=q_chunk)
+    # carry the plan's compute policy so prefill/decode dry-runs measure the
+    # path the record claims (train shapes get it via jit_train_step anyway)
+    model = Model(cfg, jnp.bfloat16, q_chunk=q_chunk,
+                  compute=plan.compute_policy())
     meta = {"arch": arch, "shape": shape_name, "chips": chips,
             "mesh": mesh_name,
             "kind": shape.kind, "plan": plan.rules + ("+zero1" if plan.zero1 else ""),
-            "gas": plan.gas}
+            "gas": plan.gas, "remat": plan.remat, "kernels": plan.kernels}
 
     if shape.kind == "train":
         meta["tokens"] = shape.global_batch * shape.seq_len
+        # closed-form expectation of the remat policy's saved-activation
+        # bytes per device (paper's Table III axis), to sit next to XLA's
+        # measured peak; parallel ways come from the *mesh* (the plan's
+        # dp/tp are nominal under the production meshes)
+        mesh_dp = (mesh.shape.get("data", 1) or 1) * (mesh.shape.get("pod", 1) or 1)
+        meta["activation_bytes_estimate"] = cmp.activation_bytes_estimate(
+            cfg, shape.global_batch, shape.seq_len, plan.compute_policy(),
+            dp=mesh_dp, tp=mesh.shape.get("model", 1) or 1,
+            pp=mesh.shape.get("pipe", 1) or 1, gas=plan.gas)
         step = jit_train_step(model, AdamWConfig(), plan, mesh,
                               shape.global_batch, shape.seq_len)
         bsds, _ = batch_specs(cfg, shape.global_batch, shape.seq_len)
@@ -146,6 +158,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
         t_compile = time.time() - t0
 
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # jax 0.4.x: list of per-program dicts
+            cost = cost[0] if cost else {}
         try:
             ma = compiled.memory_analysis()
             mem = {
@@ -154,8 +168,17 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
                 "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
                 "generated_code_bytes": getattr(ma, "generated_code_size_in_bytes", None),
             }
+            # XLA's measured peak (the paper's Table III axis): temps are the
+            # live intermediates — exactly what the remat policy trades
+            # against recompute; fall back to temps+args when the backend
+            # has no dedicated peak counter
+            peak = getattr(ma, "peak_memory_in_bytes", None)
+            if peak is None and mem["temp_bytes"] is not None:
+                peak = (mem["temp_bytes"] or 0) + (mem["argument_bytes"] or 0)
+            mem["peak_bytes"] = peak
         except Exception as e:  # backend may not support it
             mem = {"error": str(e)}
+        act_est = meta.pop("activation_bytes_estimate", None)
         hlo_text = compiled.as_text()
         # trip-count-corrected cost model (XLA's cost_analysis counts each
         # while body once — useless for scanned layer stacks; see
@@ -185,17 +208,23 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
             "collective_bytes_total": coll_total,
             "unknown_trip_loops": totals.unknown_trip_loops,
             "memory_analysis": mem,
+            "activation_bytes_estimate": act_est,
             "roofline": terms.as_dict(),
             "model_flops": mf,
             "useful_flops_ratio": (mf / (flops * meta["chips"])) if flops else None,
         }
         if verbose:
             dom = terms.dominant
+            peak = mem.get("peak_bytes")
+            peak_s = f" | peak {peak/1e9:.2f}GB" if peak else ""
+            est_s = (f" (remat={meta['remat']} est. saved-act "
+                     f"{act_est/1e9:.2f}GB)" if act_est else "")
             print(f"[ok] {arch} x {shape_name} ({mesh_name}): "
                   f"lower {t_lower:.1f}s compile {t_compile:.1f}s | "
                   f"compute {terms.compute_s*1e3:.2f}ms mem {terms.memory_s*1e3:.2f}ms "
                   f"coll {terms.collective_s*1e3:.2f}ms -> {dom}-bound | "
-                  f"useful-flops ratio {rec['useful_flops_ratio'] and round(rec['useful_flops_ratio'],3)}")
+                  f"useful-flops ratio {rec['useful_flops_ratio'] and round(rec['useful_flops_ratio'],3)}"
+                  f"{peak_s}{est_s}")
     except Exception as e:
         rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                "status": "error", "error": f"{type(e).__name__}: {e}",

@@ -104,6 +104,25 @@ VARIANTS = {
              "per-transfer activations, bubble 3/11 vs 1/9 — the comm-"
              "granularity tradeoff; true interleaved-1F1B bubble shrinkage "
              "is modeled analytically in core/bubble.py)"),
+    # ComputePolicy points: recompute policy x fused kernels (the compute-
+    # path axis of the search space; see core/compute.py)
+    "remat_selective": _v(
+        plan_fn=lambda p: dataclasses.replace(p, remat="selective"),
+        note="save matmul outputs (dots_with_no_batch_dims_saveable): "
+             "backward skips recomputing the heavy dots"),
+    "remat_none": _v(
+        plan_fn=lambda p: dataclasses.replace(p, remat="none"),
+        note="no rematerialization: max memory, zero recompute — the fast "
+             "point when it fits (compare memory_analysis peak)"),
+    "remat_selective+gas4": _v(
+        plan_fn=lambda p: dataclasses.replace(p, remat="selective", gas=4),
+        note="selective recompute with 4 microbatches: GAS shrinks the live "
+             "activation set, buying back selective's extra residency"),
+    "kernels_fused": _v(
+        plan_fn=lambda p: dataclasses.replace(p, kernels=True),
+        note="fused Pallas norm/MLP-gate/attention/CE on the train path "
+             "(CAUTION on CPU: interpret-mode kernels make lowering of "
+             "production shapes extremely slow; meant for TPU backends)"),
 }
 
 
@@ -142,7 +161,8 @@ def main():
     plan_matrix = {
         "qwen3": ["baseline", "pad_vocab256", "seq_shard", "gas4", "fsdp", "no_zero1",
                   "moe_dp_attn+seq", "fsdp_seq", "pp2_gas8", "pp4_gas8",
-                  "pp2_v2"],
+                  "pp2_v2", "remat_selective", "remat_none",
+                  "remat_selective+gas4"],
         "qwen3_decode": ["baseline", "kv_int8"],
         "llama4_prefill": ["baseline", "seq_shard", "kv_int8"],
         "seamless": ["baseline", "pad_vocab256", "embed_replicated"],

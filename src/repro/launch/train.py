@@ -51,7 +51,7 @@ def parse_plan(args, n_devices: int) -> ParallelPlan:
     plan = ParallelPlan(
         dp=dp, tp=tp, pp=pp, virtual_stages=args.virtual_stages,
         rules=args.rules, zero1=not args.no_zero1, gas=args.gas,
-        precision=args.precision)
+        precision=args.precision, remat=args.remat, kernels=args.kernels)
     if plan.n_devices != n_devices:
         raise SystemExit(
             f"error: dp={dp} x tp={tp} x pp={pp} = {plan.n_devices} devices "
@@ -71,6 +71,15 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--gas", type=int, default=1)
     ap.add_argument("--precision", choices=["bf16", "fp16", "fp32"], default="fp32")
+    ap.add_argument("--remat", choices=["full", "selective", "none"],
+                    default="full",
+                    help="activation checkpointing: full = save layer "
+                         "boundaries only; selective = also save matmul "
+                         "outputs (skip dot recompute in backward); none = "
+                         "save everything (fastest, most memory)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="route norm/MLP-gate/attention/CE through the fused "
+                         "Pallas kernels (interpret-mode on CPU)")
     ap.add_argument("--rules", choices=["megatron_tp", "fsdp", "dp_only", "tp_only"],
                     default="megatron_tp")
     ap.add_argument("--no-zero1", action="store_true")
@@ -92,12 +101,29 @@ def main() -> None:
         cfg = cfg.reduced()
     n_dev = jax.device_count()
     plan = parse_plan(args, n_dev)
+    if args.kernels:
+        # loud, up-front validation of the kernel fast path against this
+        # architecture's flavour (the per-op fallbacks also warn at trace)
+        if cfg.attn_logit_softcap is not None:
+            print("warning: --kernels with attn_logit_softcap set: the flash "
+                  "kernel has no softcap support, attention falls back to "
+                  "the jnp path (norm/MLP/CE kernels still engage)")
+        if cfg.norm != "rmsnorm":
+            print(f"warning: --kernels with norm={cfg.norm!r}: only rmsnorm "
+                  "has a fused kernel, norms take the jnp path")
+        if cfg.act != "swiglu":
+            print(f"warning: --kernels with act={cfg.act!r}: only swiglu has "
+                  "a fused kernel, MLPs take the jnp path")
+        if cfg.family in ("moe",):
+            print("warning: --kernels on an MoE family: expert einsums stay "
+                  "jnp (norm/shared-MLP/attention/CE kernels still engage)")
     mesh = mesh_for_plan(plan)
     print(f"arch={cfg.name} params={Model(cfg).n_params():,} "
           f"mesh=(pp={plan.pp},dp={plan.dp},tp={plan.tp})"
           f"{f' v={plan.virtual_stages}' if plan.virtual_stages > 1 else ''} "
           f"rules={plan.rules} zero1={plan.zero1} gas={plan.gas} "
-          f"precision={plan.precision}")
+          f"precision={plan.precision} remat={plan.remat} "
+          f"kernels={plan.kernels}")
 
     model = Model(cfg, jnp.float32 if args.precision == "fp32" else jnp.bfloat16)
     opt = AdamWConfig(lr=cosine_schedule(args.lr, 10, args.steps))

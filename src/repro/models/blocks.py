@@ -8,6 +8,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.compute import ComputePolicy, resolve as resolve_policy
 from repro.models import layers
 from repro.models.common import ModelConfig, Spec
 
@@ -57,12 +58,17 @@ def self_attn_block(
     causal: bool = True,
     q_chunk: int = 1024,
     return_kv: bool = False,
+    policy: ComputePolicy | None = None,
 ):
     """Full-sequence (train / prefill) self attention with residual.
 
     With ``return_kv=True`` also returns the (possibly RoPE'd) K and V,
-    which prefill places into the decode cache."""
-    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps)
+    which prefill places into the decode cache.  ``policy.kernels`` routes
+    the norm through the fused rmsnorm kernel and attention through the
+    Pallas flash kernel (softcap models fall back with a warning)."""
+    pol = resolve_policy(policy)
+    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps,
+                          use_kernel=pol.kernels)
     q, k, v = _project_qkv(params, h, h, cfg)
     if cfg.pos == "rope":
         pos = positions if positions is not None else jnp.arange(x.shape[1])
@@ -75,6 +81,7 @@ def self_attn_block(
         softcap=cfg.attn_logit_softcap,
         q_chunk=q_chunk,
         use_flash=cfg.use_flash,
+        policy=pol,
     )
     B, S = x.shape[:2]
     out = out.reshape(B, S, -1) @ params["wo"]
@@ -135,10 +142,14 @@ def cross_attn_block(
     x: jax.Array,
     memory: jax.Array,         # encoder output (B, T, d)
     cfg: ModelConfig,
+    policy: ComputePolicy | None = None,
 ) -> jax.Array:
-    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps)
+    pol = resolve_policy(policy)
+    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps,
+                          use_kernel=pol.kernels)
     q, k, v = _project_qkv(params, h, memory, cfg)
-    out = layers.attention(q, k, v, causal=False, use_flash=cfg.use_flash)
+    out = layers.attention(q, k, v, causal=False, use_flash=cfg.use_flash,
+                           policy=pol)
     B, S = x.shape[:2]
     out = out.reshape(B, S, -1) @ params["wo"]
     return x + out
@@ -156,6 +167,9 @@ def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
     return spec
 
 
-def mlp_block(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
-    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps)
-    return x + layers.mlp(h, params, cfg.act)
+def mlp_block(params: dict, x: jax.Array, cfg: ModelConfig,
+              policy: ComputePolicy | None = None) -> jax.Array:
+    pol = resolve_policy(policy)
+    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps,
+                          use_kernel=pol.kernels)
+    return x + layers.mlp(h, params, cfg.act, use_kernel=pol.kernels)

@@ -11,11 +11,14 @@ FlashAttention-2 port, and the reference semantics for the Pallas kernel in
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.compute import ComputePolicy, resolve as resolve_policy
 
 # ---------------------------------------------------------------------------
 # Norms
@@ -38,9 +41,17 @@ def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float = 1e
     return (normed * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
 
 
-def apply_norm(x: jax.Array, params: dict, kind: str, eps: float) -> jax.Array:
+def apply_norm(x: jax.Array, params: dict, kind: str, eps: float,
+               use_kernel: bool = False) -> jax.Array:
     if kind == "rmsnorm":
+        if use_kernel:
+            from repro.kernels import ops as kernel_ops
+            return kernel_ops.rmsnorm(x, params["scale"], eps)
         return rms_norm(x, params["scale"], eps)
+    if use_kernel:
+        warnings.warn("fused kernels requested but norm kind is "
+                      f"{kind!r}: only rmsnorm has a Pallas kernel, "
+                      "falling back to the jnp path", stacklevel=2)
     return layer_norm(x, params["scale"], params["bias"], eps)
 
 
@@ -114,6 +125,7 @@ def attention(
     q_chunk: int = 1024,
     kv_positions: jax.Array | None = None,
     use_flash: bool = False,
+    policy: ComputePolicy | None = None,
 ) -> jax.Array:
     """GQA attention, blockwise over query chunks.
 
@@ -121,11 +133,23 @@ def attention(
     timeline — pass the cache write position at decode time; causal masking
     then automatically hides not-yet-written cache slots.  ``kv_positions``
     overrides the default ``arange(Skv)`` for ring-buffer (SWA) caches;
-    negative entries mark invalid slots.
+    negative entries mark invalid slots.  ``policy.kernels`` implies
+    ``use_flash``; the q-chunk scan of the jnp path stays full-checkpointed
+    regardless of ``policy.remat`` (score recompute is intrinsic to the
+    flash-style formulation, not a remat knob).
     """
     B, Sq, Hq, hd = q.shape
     _, Skv, Hkv, _ = k.shape
     assert Hq % Hkv == 0, (Hq, Hkv)
+    pol = resolve_policy(policy)
+    use_flash = use_flash or pol.kernels
+    if use_flash and softcap is not None and Sq > 1:
+        # loud fallback, not silent: the flash kernel has no logit-softcap
+        # support, so softcap models (gemma-style) take the jnp path
+        warnings.warn(
+            "flash attention requested but attn_logit_softcap is set; "
+            "falling back to the chunked jnp attention path",
+            stacklevel=2)
     if (use_flash and kv_positions is None and softcap is None and Sq > 1
             and isinstance(q_offset, int)):
         from repro.kernels import ops as kernel_ops
@@ -154,6 +178,10 @@ def attention(
         qs = qg.reshape(B, n_chunks, q_chunk, Hkv, G, hd).transpose(1, 0, 2, 3, 4, 5)
         ps = q_positions.reshape(n_chunks, q_chunk)
 
+        # always full-checkpointed, independent of the remat policy: score
+        # recompute is intrinsic to the flash-style formulation — saving the
+        # per-chunk (q_chunk, Skv) probability residuals would reintroduce
+        # the O(Sq x Skv) footprint this chunking exists to avoid
         @jax.checkpoint
         def body(carry, xs):
             qc, pc = xs
@@ -177,9 +205,17 @@ def gelu_mlp(x: jax.Array, w1: jax.Array, w2: jax.Array) -> jax.Array:
     return jax.nn.gelu(x @ w1, approximate=True) @ w2
 
 
-def mlp(x: jax.Array, params: dict, act: str) -> jax.Array:
+def mlp(x: jax.Array, params: dict, act: str, use_kernel: bool = False) -> jax.Array:
     if act == "swiglu":
+        if use_kernel:
+            from repro.kernels import ops as kernel_ops
+            h = kernel_ops.swiglu(x, params["w1"], params["w3"])
+            return h @ params["w2"]
         return swiglu(x, params["w1"], params["w3"], params["w2"])
+    if use_kernel:
+        warnings.warn(f"fused kernels requested but act is {act!r}: only "
+                      "swiglu has a Pallas kernel, falling back to the jnp "
+                      "path", stacklevel=2)
     return gelu_mlp(x, params["w1"], params["w2"])
 
 

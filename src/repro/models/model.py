@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compute import ComputePolicy, resolve as resolve_policy
 from repro.models import blocks, layers, moe, rwkv, ssm
 from repro.models.common import (
     ModelConfig, Spec, axes_tree, init_params, is_spec, param_count,
@@ -99,10 +100,14 @@ def _n_stack(cfg: ModelConfig) -> int:
 
 class Model:
     def __init__(self, cfg: ModelConfig, compute_dtype: Any = jnp.bfloat16,
-                 q_chunk: int = 1024):
+                 q_chunk: int = 1024,
+                 compute: ComputePolicy | None = None):
         self.cfg = cfg
         self.compute_dtype = compute_dtype
         self.q_chunk = q_chunk
+        # compute-path policy (remat mode + fused-kernel routing); None keeps
+        # the seed behaviour: full remat on every stack, jnp compute path
+        self.compute = resolve_policy(compute)
 
     # ------------------------------------------------------------------
     # Specs / init
@@ -170,43 +175,49 @@ class Model:
                    memory: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
         cfg = self.cfg
         fam = cfg.family
+        pol = self.compute
 
         def body(carry, lp):
             x, aux = carry
             if fam in ("dense", "vlm") or (fam == "encdec" and memory is None):
                 x = blocks.self_attn_block(lp["attn"], x, cfg, causal=causal,
-                                           q_chunk=self.q_chunk)
-                x = blocks.mlp_block(lp["mlp"], x, cfg)
+                                           q_chunk=self.q_chunk, policy=pol)
+                x = blocks.mlp_block(lp["mlp"], x, cfg, policy=pol)
             elif fam == "moe":
                 if cfg.moe_every > 1:
                     def dense_body(c, dlp):
                         c = blocks.self_attn_block(dlp["attn"], c, cfg,
                                                    causal=causal,
-                                                   q_chunk=self.q_chunk)
-                        return blocks.mlp_block(dlp["mlp"], c, cfg), None
+                                                   q_chunk=self.q_chunk,
+                                                   policy=pol)
+                        return blocks.mlp_block(dlp["mlp"], c, cfg,
+                                                policy=pol), None
                     x, _ = jax.lax.scan(dense_body, x, lp["dense"])
                 x = blocks.self_attn_block(lp["attn"], x, cfg, causal=causal,
-                                           q_chunk=self.q_chunk)
-                x, a = moe.moe_block(lp["moe"], x, cfg)
+                                           q_chunk=self.q_chunk, policy=pol)
+                x, a = moe.moe_block(lp["moe"], x, cfg, policy=pol)
                 aux = aux + a
             elif fam == "encdec":
                 x = blocks.self_attn_block(lp["attn"], x, cfg, causal=True,
-                                           q_chunk=self.q_chunk)
-                x = blocks.cross_attn_block(lp["cross"], x, memory, cfg)
-                x = blocks.mlp_block(lp["mlp"], x, cfg)
+                                           q_chunk=self.q_chunk, policy=pol)
+                x = blocks.cross_attn_block(lp["cross"], x, memory, cfg,
+                                            policy=pol)
+                x = blocks.mlp_block(lp["mlp"], x, cfg, policy=pol)
             elif fam == "rwkv":
-                x = rwkv.rwkv_block(lp, x, cfg)
+                x = rwkv.rwkv_block(lp, x, cfg, policy=pol)
             elif fam == "hybrid":
-                x = ssm.mamba_block(lp, x, cfg)
+                x = ssm.mamba_block(lp, x, cfg, policy=pol)
             else:
                 raise ValueError(fam)
             return (x, aux), None
 
-        (x, aux), _ = jax.lax.scan(jax.checkpoint(body), (x, jnp.float32(0.0)), stacked)
+        (x, aux), _ = jax.lax.scan(pol.checkpoint(body),
+                                   (x, jnp.float32(0.0)), stacked)
         return x, aux
 
     def _run_hybrid(self, params: dict, x: jax.Array) -> jax.Array:
         cfg = self.cfg
+        pol = self.compute
         n_super = _n_super(cfg)
         per = cfg.n_layers // n_super
         grouped = jax.tree.map(
@@ -215,32 +226,34 @@ class Model:
 
         def super_body(x, lp_group):
             def inner(x2, lp):
-                return ssm.mamba_block(lp, x2, cfg), None
+                return ssm.mamba_block(lp, x2, cfg, policy=pol), None
             x, _ = jax.lax.scan(inner, x, lp_group)
             x = blocks.self_attn_block(shared["attn"], x, cfg, causal=True,
-                                       q_chunk=self.q_chunk)
-            x = blocks.mlp_block(shared["mlp"], x, cfg)
+                                       q_chunk=self.q_chunk, policy=pol)
+            x = blocks.mlp_block(shared["mlp"], x, cfg, policy=pol)
             return x, None
 
-        x, _ = jax.lax.scan(jax.checkpoint(super_body), x, grouped)
+        x, _ = jax.lax.scan(pol.checkpoint(super_body), x, grouped)
         return x
 
     def encode(self, params: dict, frames: jax.Array) -> jax.Array:
         """Audio/encoder stack: frame embeddings (B, T, fd) -> memory (B, T, d)."""
         cfg = self.cfg
+        pol = self.compute
         enc = params["encoder"]
         x = frames.astype(self.compute_dtype) @ enc["in_proj"].astype(self.compute_dtype)
 
         def body(carry, lp):
             x, _ = carry
             x = blocks.self_attn_block(lp["attn"], x, cfg, causal=False,
-                                       q_chunk=self.q_chunk)
-            x = blocks.mlp_block(lp["mlp"], x, cfg)
+                                       q_chunk=self.q_chunk, policy=pol)
+            x = blocks.mlp_block(lp["mlp"], x, cfg, policy=pol)
             return (x, jnp.float32(0.0)), None
 
-        (x, _), _ = jax.lax.scan(jax.checkpoint(body), (x, jnp.float32(0.0)),
+        (x, _), _ = jax.lax.scan(pol.checkpoint(body), (x, jnp.float32(0.0)),
                                  enc["layers"])
-        return layers.apply_norm(x, enc["final_norm"], cfg.norm, cfg.rms_eps)
+        return layers.apply_norm(x, enc["final_norm"], cfg.norm, cfg.rms_eps,
+                                 use_kernel=pol.kernels)
 
     # ------------------------------------------------------------------
     # Forward / loss
@@ -259,7 +272,8 @@ class Model:
             x, aux = self._run_stack(cparams["layers"], x, memory=memory)
         else:
             x, aux = self._run_stack(cparams["layers"], x)
-        x = layers.apply_norm(x, cparams["final_norm"], cfg.norm, cfg.rms_eps)
+        x = layers.apply_norm(x, cparams["final_norm"], cfg.norm, cfg.rms_eps,
+                              use_kernel=self.compute.kernels)
         return x, aux
 
     def logits(self, params: dict, batch: dict) -> jax.Array:
@@ -281,7 +295,8 @@ class Model:
         mask = jnp.ones_like(labels, jnp.float32) if mask is None else mask[:, 1:]
         W = self._unembed_matrix(params).astype(self.compute_dtype)
         ce = _chunked_cross_entropy(h, W, labels, mask,
-                                    valid_vocab=self.cfg.vocab_size)
+                                    valid_vocab=self.cfg.vocab_size,
+                                    policy=self.compute)
         total = ce + MOE_AUX_COEF * aux / max(cfg.n_layers, 1)
         return total, {"ce": ce, "moe_aux": aux}
 
@@ -320,19 +335,22 @@ class Model:
         if B % n_micro != 0:
             raise ValueError(f"batch {B} not divisible by n_micro={n_micro}")
 
+        pol = self.compute
+
         def layer_fn(lp, h):
             h = blocks.self_attn_block(lp["attn"], h, cfg, causal=True,
-                                       q_chunk=self.q_chunk)
-            return blocks.mlp_block(lp["mlp"], h, cfg)
+                                       q_chunk=self.q_chunk, policy=pol)
+            return blocks.mlp_block(lp["mlp"], h, cfg, policy=pol)
 
         pipelined = pipe.pipeline_spmd(
-            pipe.layer_stage_fn(layer_fn, remat=True), mesh,
+            pipe.layer_stage_fn(layer_fn, policy=pol), mesh,
             n_stages=pp, v=virtual_stages,
             pipe_axis=pipe_axis, data_axis=data_axis)
         micro = x.reshape(n_micro, B // n_micro, *x.shape[1:])
         stages = pipe.stack_stages(cparams["layers"], n_stages)
         h = pipelined(stages, micro).reshape(B, *x.shape[1:])
-        h = layers.apply_norm(h, cparams["final_norm"], cfg.norm, cfg.rms_eps)
+        h = layers.apply_norm(h, cparams["final_norm"], cfg.norm, cfg.rms_eps,
+                              use_kernel=pol.kernels)
         return self._loss_from_hidden(params, h, batch, jnp.float32(0.0))
 
     # ------------------------------------------------------------------
@@ -392,6 +410,7 @@ class Model:
     def prefill(self, params: dict, batch: dict, cache_len: int) -> tuple[jax.Array, dict]:
         """Returns (last-token logits (B, V), cache at pos=S)."""
         cfg = self.cfg
+        pol = self.compute
         cparams = _cast_floating(params, self.compute_dtype)
         x = self._embed(cparams, batch)
         B, S = x.shape[:2]
@@ -405,33 +424,35 @@ class Model:
                 def dense_body(c, dlp):
                     c, k, v = blocks.self_attn_block(
                         dlp["attn"], c, cfg, causal=True,
-                        q_chunk=self.q_chunk, return_kv=True)
-                    c = blocks.mlp_block(dlp["mlp"], c, cfg)
+                        q_chunk=self.q_chunk, return_kv=True, policy=pol)
+                    c = blocks.mlp_block(dlp["mlp"], c, cfg, policy=pol)
                     return c, _kv_into_cache(k, v, clen, cfg.kv_quant)
 
                 x, dense_kvs = jax.lax.scan(dense_body, x, lp["dense"])
                 x, k, v = blocks.self_attn_block(lp["attn"], x, cfg, causal=True,
-                                                 q_chunk=self.q_chunk, return_kv=True)
-                x, a = moe.moe_block(lp["moe"], x, cfg)
+                                                 q_chunk=self.q_chunk,
+                                                 return_kv=True, policy=pol)
+                x, a = moe.moe_block(lp["moe"], x, cfg, policy=pol)
                 return (x, aux + a), {"moe_kv": _kv_into_cache(k, v, clen, cfg.kv_quant),
                                       "dense": dense_kvs}
 
-            (x, _), kvs = jax.lax.scan(jax.checkpoint(body), (x, jnp.float32(0.0)),
+            (x, _), kvs = jax.lax.scan(pol.checkpoint(body), (x, jnp.float32(0.0)),
                                        cparams["layers"])
             cache["layers"] = kvs
         elif cfg.family in ("dense", "vlm", "moe"):
             def body(carry, lp):
                 x, aux = carry
                 x, k, v = blocks.self_attn_block(lp["attn"], x, cfg, causal=True,
-                                                 q_chunk=self.q_chunk, return_kv=True)
+                                                 q_chunk=self.q_chunk,
+                                                 return_kv=True, policy=pol)
                 if cfg.family == "moe":
-                    x, a = moe.moe_block(lp["moe"], x, cfg)
+                    x, a = moe.moe_block(lp["moe"], x, cfg, policy=pol)
                     aux = aux + a
                 else:
-                    x = blocks.mlp_block(lp["mlp"], x, cfg)
+                    x = blocks.mlp_block(lp["mlp"], x, cfg, policy=pol)
                 return (x, aux), _kv_into_cache(k, v, clen, cfg.kv_quant)
 
-            (x, _), kvs = jax.lax.scan(jax.checkpoint(body), (x, jnp.float32(0.0)),
+            (x, _), kvs = jax.lax.scan(pol.checkpoint(body), (x, jnp.float32(0.0)),
                                        cparams["layers"])
             cache["layers"] = kvs
         elif cfg.family == "encdec":
@@ -440,19 +461,21 @@ class Model:
             def body(carry, lp):
                 x, _ = carry
                 x, k, v = blocks.self_attn_block(lp["attn"], x, cfg, causal=True,
-                                                 q_chunk=self.q_chunk, return_kv=True)
-                x = blocks.cross_attn_block(lp["cross"], x, memory, cfg)
-                x = blocks.mlp_block(lp["mlp"], x, cfg)
+                                                 q_chunk=self.q_chunk,
+                                                 return_kv=True, policy=pol)
+                x = blocks.cross_attn_block(lp["cross"], x, memory, cfg,
+                                            policy=pol)
+                x = blocks.mlp_block(lp["mlp"], x, cfg, policy=pol)
                 return (x, jnp.float32(0.0)), _kv_into_cache(k, v, clen, cfg.kv_quant)
 
-            (x, _), kvs = jax.lax.scan(jax.checkpoint(body), (x, jnp.float32(0.0)),
+            (x, _), kvs = jax.lax.scan(pol.checkpoint(body), (x, jnp.float32(0.0)),
                                        cparams["layers"])
             cache["layers"] = kvs
         elif cfg.family == "rwkv":
             def body(x, lp):
-                x, c = rwkv.rwkv_prefill(lp, x, cfg)
+                x, c = rwkv.rwkv_prefill(lp, x, cfg, policy=pol)
                 return x, c
-            x, cs = jax.lax.scan(jax.checkpoint(body), x, cparams["layers"])
+            x, cs = jax.lax.scan(pol.checkpoint(body), x, cparams["layers"])
             cache["layers"] = cs
         elif cfg.family == "hybrid":
             n_super = _n_super(cfg)
@@ -463,14 +486,15 @@ class Model:
 
             def super_body(x, lp_group):
                 def inner(x2, lp):
-                    return ssm.mamba_prefill(lp, x2, cfg)
+                    return ssm.mamba_prefill(lp, x2, cfg, policy=pol)
                 x, mcs = jax.lax.scan(inner, x, lp_group)
                 x, k, v = blocks.self_attn_block(shared["attn"], x, cfg, causal=True,
-                                                 q_chunk=self.q_chunk, return_kv=True)
-                x = blocks.mlp_block(shared["mlp"], x, cfg)
+                                                 q_chunk=self.q_chunk,
+                                                 return_kv=True, policy=pol)
+                x = blocks.mlp_block(shared["mlp"], x, cfg, policy=pol)
                 return x, (mcs, _kv_into_cache(k, v, clen, cfg.kv_quant))
 
-            x, (mcs, kvs) = jax.lax.scan(jax.checkpoint(super_body), x, grouped)
+            x, (mcs, kvs) = jax.lax.scan(pol.checkpoint(super_body), x, grouped)
             cache["layers"] = jax.tree.map(
                 lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), mcs)
             cache["shared"] = kvs
@@ -615,14 +639,28 @@ def _cast_floating(tree: Any, dtype: Any, skip: tuple = ()) -> Any:
 
 def _chunked_cross_entropy(h: jax.Array, W: jax.Array, labels: jax.Array,
                            mask: jax.Array, target_chunk: int = 8192,
-                           valid_vocab: int | None = None) -> jax.Array:
+                           valid_vocab: int | None = None,
+                           policy: ComputePolicy | None = None) -> jax.Array:
     """CE over (B, S, d) hidden vs (d, V) unembedding, chunked over tokens so
-    the full (N, V) logits tensor is never materialized (vocab up to 256k)."""
+    the full (N, V) logits tensor is never materialized (vocab up to 256k).
+
+    ``policy.kernels`` routes through the fused Pallas online-logsumexp
+    kernel (per-token losses; the mask/normalization stay outside).  The
+    chunk body stays under full ``jax.checkpoint`` regardless of
+    ``policy.remat``: saving the per-chunk logits as residuals would
+    materialize exactly the (N, V) tensor this formulation exists to avoid —
+    the remat knob governs the layer stacks, not this loss tail.
+    """
+    pol = resolve_policy(policy)
     B, S, d = h.shape
     N = B * S
     hf = h.reshape(N, d)
     yf = labels.reshape(N)
     mf = mask.reshape(N)
+    if pol.kernels:
+        from repro.kernels import ops as kernel_ops
+        losses = kernel_ops.cross_entropy_tokens(hf, W, yf, valid_vocab)
+        return jnp.sum(losses * mf) / jnp.maximum(jnp.sum(mf), 1.0)
     chunk = N
     for c in (target_chunk, 4096, 2048, 1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
         if c <= N and N % c == 0:
@@ -649,15 +687,18 @@ def _chunked_cross_entropy(h: jax.Array, W: jax.Array, labels: jax.Array,
 
     xs = (hf.reshape(n_chunks, chunk, d), yf.reshape(n_chunks, chunk),
           mf.reshape(n_chunks, chunk))
-    (loss_sum, count), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), xs)
+    (loss_sum, count), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), xs)
     return loss_sum / jnp.maximum(count, 1.0)
 
 
 @functools.lru_cache(maxsize=64)
-def _cached_model(cfg: ModelConfig, dtype_name: str, q_chunk: int) -> Model:
-    return Model(cfg, jnp.dtype(dtype_name), q_chunk)
+def _cached_model(cfg: ModelConfig, dtype_name: str, q_chunk: int,
+                  compute: ComputePolicy | None) -> Model:
+    return Model(cfg, jnp.dtype(dtype_name), q_chunk, compute)
 
 
 def build_model(cfg: ModelConfig, compute_dtype: Any = jnp.bfloat16,
-                q_chunk: int = 1024) -> Model:
-    return _cached_model(cfg, jnp.dtype(compute_dtype).name, q_chunk)
+                q_chunk: int = 1024,
+                compute: ComputePolicy | None = None) -> Model:
+    return _cached_model(cfg, jnp.dtype(compute_dtype).name, q_chunk, compute)

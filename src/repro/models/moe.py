@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compute import ComputePolicy, resolve as resolve_policy
 from repro.models import layers
 from repro.models.blocks import mlp_specs, norm_spec
 from repro.models.common import ModelConfig, Spec
@@ -101,10 +102,15 @@ def _route(gates: jax.Array, top_k: int, capacity: int):
     return assignments, slot_to_token, slot_valid, aux
 
 
-def moe_block(params: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
-    """x: (B, S, d) -> (out, aux_loss)."""
+def moe_block(params: dict, x: jax.Array, cfg: ModelConfig,
+              policy: ComputePolicy | None = None) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).  ``policy.kernels`` fuses the norm
+    and the shared/dense-residual MLPs; the expert einsums stay jnp (their
+    (E, C) slot layout has no Pallas kernel yet)."""
+    pol = resolve_policy(policy)
     B, S, d = x.shape
-    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps)
+    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps,
+                          use_kernel=pol.kernels)
     N = B * S
     G, g = group_shape(N)
     C = moe_capacity(g, cfg)
@@ -141,7 +147,9 @@ def moe_block(params: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, 
 
     out = out.reshape(B, S, d)
     if cfg.shared_expert:
-        out = out + layers.mlp(h, params["shared"], cfg.act)
+        out = out + layers.mlp(h, params["shared"], cfg.act,
+                               use_kernel=pol.kernels)
     if cfg.moe_dense_residual:
-        out = out + layers.mlp(h, params["dense"], cfg.act)
+        out = out + layers.mlp(h, params["dense"], cfg.act,
+                               use_kernel=pol.kernels)
     return x + out, aux.astype(jnp.float32)

@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.compute import ComputePolicy, resolve as resolve_policy
 from repro.models import layers
 from repro.models.blocks import norm_spec
 from repro.models.common import ModelConfig, Spec
@@ -71,7 +72,8 @@ def _decay(p: dict, xw: jax.Array) -> jax.Array:
     return jnp.exp(-jnp.exp(w.astype(jnp.float32)))
 
 
-def _wkv_chunked(r, k, v, w, u, state, chunk: int):
+def _wkv_chunked(r, k, v, w, u, state, chunk: int,
+                 policy: ComputePolicy | None = None):
     """Chunked-parallel wkv recurrence (log-space decays).
 
     r/k/w: (B, T, H, K); v: (B, T, H, V); u: (H, K); state: (B, H, K, V).
@@ -116,7 +118,8 @@ def _wkv_chunked(r, k, v, w, u, state, chunk: int):
             "bihk,bihv->bhkv", kc * rem, vc)
         return S_new, y
 
-    state, ys = jax.lax.scan(jax.checkpoint(body), state, (rs, ks, vs, lws))
+    state, ys = jax.lax.scan(resolve_policy(policy).checkpoint(body),
+                             state, (rs, ks, vs, lws))
     return ys.swapaxes(0, 1).reshape(B, T, H, V), state
 
 
@@ -140,11 +143,13 @@ def _heads(x: jax.Array, H: int) -> jax.Array:
 
 
 def time_mix(p: dict, x: jax.Array, x_prev: jax.Array, state: jax.Array,
-             cfg: ModelConfig):
+             cfg: ModelConfig, policy: ComputePolicy | None = None):
     """x: (B, T, d); x_prev: (B, d) token before x[:, 0]; state: (B, H, K, V)."""
+    pol = resolve_policy(policy)
     B, T, d = x.shape
     H = n_rwkv_heads(cfg)
-    h = layers.apply_norm(x, p["ln"], cfg.norm, cfg.rms_eps)
+    h = layers.apply_norm(x, p["ln"], cfg.norm, cfg.rms_eps,
+                          use_kernel=pol.kernels)
     hs = jnp.concatenate([x_prev[:, None, :], h[:, :-1, :]], axis=1)  # shifted
     xr, xk, xv, xw, xg = (_lerp(h, hs, p[m]) for m in ("mu_r", "mu_k", "mu_v", "mu_w", "mu_g"))
     r = _heads(xr @ p["wr"], H).astype(jnp.float32)
@@ -157,7 +162,7 @@ def time_mix(p: dict, x: jax.Array, x_prev: jax.Array, state: jax.Array,
     if T >= 8:
         outs_bt, state = _wkv_chunked(r, k, v, w, u,
                                       state.astype(jnp.float32),
-                                      _pick_chunk(T))
+                                      _pick_chunk(T), policy=pol)
         y = outs_bt.reshape(B, T, d).astype(x.dtype)
     else:
         def step(s, inp):
@@ -180,24 +185,27 @@ def channel_mix(p: dict, x: jax.Array, x_prev: jax.Array, cfg: ModelConfig):
     return x + r * (k @ p["wv"]), h[:, -1, :]
 
 
-def rwkv_block(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+def rwkv_block(params: dict, x: jax.Array, cfg: ModelConfig,
+               policy: ComputePolicy | None = None) -> jax.Array:
     B, _, d = x.shape
     H = n_rwkv_heads(cfg)
     hd = rwkv_head_dim(cfg)
     zeros_prev = jnp.zeros((B, d), x.dtype)
     state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
-    x, _, _ = time_mix(params["tm"], x, zeros_prev, state0, cfg)
+    x, _, _ = time_mix(params["tm"], x, zeros_prev, state0, cfg, policy=policy)
     x, _ = channel_mix(params["cm"], x, zeros_prev, cfg)
     return x
 
 
-def rwkv_prefill(params: dict, x: jax.Array, cfg: ModelConfig):
+def rwkv_prefill(params: dict, x: jax.Array, cfg: ModelConfig,
+                 policy: ComputePolicy | None = None):
     B, _, d = x.shape
     H = n_rwkv_heads(cfg)
     hd = rwkv_head_dim(cfg)
     zeros_prev = jnp.zeros((B, d), x.dtype)
     state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
-    x, tm_prev, state = time_mix(params["tm"], x, zeros_prev, state0, cfg)
+    x, tm_prev, state = time_mix(params["tm"], x, zeros_prev, state0, cfg,
+                                 policy=policy)
     x, cm_prev = channel_mix(params["cm"], x, zeros_prev, cfg)
     return x, {"x_tm": tm_prev, "x_cm": cm_prev, "state": state}
 

@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.compute import ComputePolicy, resolve as resolve_policy
 from repro.models import layers
 from repro.models.blocks import norm_spec
 from repro.models.common import ModelConfig, Spec
@@ -82,11 +83,13 @@ def _pick_chunk(T: int, target: int = 128) -> int:
     return 1
 
 
-def _ssd_chunked(x, dt, Bm, Cm, A_log, *, chunk: int):
+def _ssd_chunked(x, dt, Bm, Cm, A_log, *, chunk: int,
+                 policy: ComputePolicy | None = None):
     """Chunked SSD scan.
 
     x: (B, T, H, P); dt: (B, T, H); Bm/Cm: (B, T, N); A_log: (H,).
-    Returns y (B, T, H, P) and final state (B, H, P, N).
+    Returns y (B, T, H, P) and final state (B, H, P, N).  ``policy`` drives
+    the per-chunk rematerialization (default: full remat, the seed policy).
     """
     Bsz, T, H, P = x.shape
     N = Bm.shape[-1]
@@ -100,7 +103,6 @@ def _ssd_chunked(x, dt, Bm, Cm, A_log, *, chunk: int):
     state0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
     tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
 
-    @jax.checkpoint
     def body(state, xs_c):
         xc, dtc, Bc, Cc = xs_c
         xc32 = xc.astype(jnp.float32)
@@ -124,41 +126,50 @@ def _ssd_chunked(x, dt, Bm, Cm, A_log, *, chunk: int):
             Bc.astype(jnp.float32), xc32)
         return new_state, y
 
-    state, ys = jax.lax.scan(body, state0, xs)
+    state, ys = jax.lax.scan(resolve_policy(policy).checkpoint(body),
+                             state0, xs)
     y = ys.swapaxes(0, 1).reshape(Bsz, T, H, P)
     return y.astype(x.dtype), state
 
 
-def mamba_block(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+def mamba_block(params: dict, x: jax.Array, cfg: ModelConfig,
+                policy: ComputePolicy | None = None) -> jax.Array:
     """Full-sequence mamba2 block with residual. x: (B, T, d)."""
+    pol = resolve_policy(policy)
     B, T, d = x.shape
     H, P, N = n_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
-    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps)
+    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps,
+                          use_kernel=pol.kernels)
     z, xbc, dt_raw = _split_proj(h @ params["in_proj"], cfg)
     xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
     xin, Bm, Cm = _split_xbc(xbc, cfg)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
     xh = xin.reshape(B, T, H, P)
-    y, _ = _ssd_chunked(xh, dt, Bm, Cm, params["A_log"], chunk=_pick_chunk(T))
+    y, _ = _ssd_chunked(xh, dt, Bm, Cm, params["A_log"], chunk=_pick_chunk(T),
+                        policy=pol)
     y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
     y = y.reshape(B, T, 2 * d)
     y = layers.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.rms_eps)
     return x + y @ params["out_proj"]
 
 
-def mamba_prefill(params: dict, x: jax.Array, cfg: ModelConfig):
+def mamba_prefill(params: dict, x: jax.Array, cfg: ModelConfig,
+                  policy: ComputePolicy | None = None):
     """Like mamba_block but also returns (conv_state, ssm_state) for decode."""
+    pol = resolve_policy(policy)
     B, T, d = x.shape
     H, P = n_ssm_heads(cfg), cfg.ssm_head_dim
     K = cfg.conv_kernel
-    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps)
+    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps,
+                          use_kernel=pol.kernels)
     z, xbc, dt_raw = _split_proj(h @ params["in_proj"], cfg)
     conv_state = xbc[:, -(K - 1):, :] if K > 1 else jnp.zeros((B, 0, xbc.shape[-1]), xbc.dtype)
     xbc_act = _causal_conv(xbc, params["conv_w"], params["conv_b"])
     xin, Bm, Cm = _split_xbc(xbc_act, cfg)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
     xh = xin.reshape(B, T, H, P)
-    y, state = _ssd_chunked(xh, dt, Bm, Cm, params["A_log"], chunk=_pick_chunk(T))
+    y, state = _ssd_chunked(xh, dt, Bm, Cm, params["A_log"],
+                            chunk=_pick_chunk(T), policy=pol)
     y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
     y = y.reshape(B, T, 2 * d)
     y = layers.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.rms_eps)

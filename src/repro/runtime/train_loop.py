@@ -4,8 +4,11 @@
 (Tables III–V, Fig. 9): the parallel decomposition (``dp`` x ``tp`` x ``pp``
 with optional interleaved ``virtual_stages``), the sharding strategy
 (tensor-parallel rule preset), ZeRO-1 on/off, micro-batch count via
-gradient-accumulation steps (GAS), and precision.  Activation checkpointing
-is implicit: every layer stack is scanned under ``jax.checkpoint``.
+gradient-accumulation steps (GAS), and precision — plus the compute-path
+knobs the paper tunes alongside them: the activation-checkpointing mode
+(``remat``: full | selective | none) and the fused Pallas kernel fast path
+(``kernels``), carried as a :class:`repro.core.compute.ComputePolicy` and
+threaded through every model family and the pipeline stage fn.
 
 One ``jit_train_step`` serves every plan on the 3D
 ``("pipe", "data", "model")`` mesh (``launch/mesh.py:mesh_for_plan``):
@@ -25,6 +28,7 @@ just ``ParallelPlan(pp=1)``.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
 import jax
@@ -33,6 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import precision as prec
 from repro.core import sharding as shd
+from repro.core.compute import DEFAULT_POLICY, ComputePolicy
 from repro.models.common import ModelConfig
 from repro.models.model import Model
 from repro.optim import AdamWConfig, adamw_init, adamw_update
@@ -51,6 +56,9 @@ class ParallelPlan:
     gas: int = 1                    # gradient accumulation steps
                                     # (== pipeline microbatches when pp > 1)
     precision: str = "bf16"         # bf16 | fp16 | fp32
+    remat: str = "full"             # activation checkpointing:
+                                    # full | selective | none (core/compute.py)
+    kernels: bool = False           # fused Pallas fast path (norm/MLP/attn/CE)
     data_axis: str = "data"
     model_axis: str = "model"
     pipe_axis: str = "pipe"
@@ -62,6 +70,7 @@ class ParallelPlan:
         for name in ("dp", "tp", "pp", "virtual_stages", "gas"):
             if getattr(self, name) < 1:
                 raise ValueError(f"{name} must be >= 1, got {getattr(self, name)}")
+        self.compute_policy()  # validates remat
 
     @property
     def n_devices(self) -> int:
@@ -71,6 +80,10 @@ class ParallelPlan:
     def n_stages(self) -> int:
         """Logical pipeline depth (interleaving included)."""
         return self.pp * self.virtual_stages
+
+    def compute_policy(self) -> ComputePolicy:
+        """The compute-path policy (remat + kernels) this plan carries."""
+        return ComputePolicy(remat=self.remat, kernels=self.kernels)
 
     def sharding_rules(self) -> shd.ShardingRules:
         preset = shd.PRESETS[self.rules]
@@ -158,7 +171,14 @@ def build_train_step(model: Model, opt_cfg: AdamWConfig, plan: ParallelPlan,
     GAS doubles as the pipeline-saturation knob exactly as in the paper.
     """
     policy = prec.policy_from_name(plan.precision)
-    model = Model(model.cfg, policy.compute_dtype, model.q_chunk)
+    compute = plan.compute_policy()
+    if model.compute not in (DEFAULT_POLICY, compute):
+        warnings.warn(
+            f"model carries compute policy {model.compute} but the plan "
+            f"specifies {compute}; the plan wins inside the executor — set "
+            f"remat/kernels on the ParallelPlan instead", stacklevel=2)
+    model = Model(model.cfg, policy.compute_dtype, model.q_chunk,
+                  compute=compute)
     if plan.pp > 1 and mesh is None:
         raise ValueError("pp > 1 requires the mesh at build time "
                          "(pipeline sharding constraints)")

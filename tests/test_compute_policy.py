@@ -1,0 +1,283 @@
+"""ComputePolicy: selectable remat + fused-kernel fast path.
+
+Covers the acceptance bar of the ComputePolicy PR:
+  * CPU interpret-mode parity (fwd + grad, under jit) for the fused
+    rmsnorm / swiglu / cross-entropy kernels vs ``kernels/ref.py``;
+  * GQA flash attention with unreplicated KV (fwd + grad vs ref);
+  * loss-trajectory equivalence of remat="selective"/"none" vs "full" on a
+    tiny model, for pp=1 (in-process) and pp=2 (virtual devices);
+  * ParallelPlan(kernels=True) training matching the reference loss to fp32
+    tolerance on every dense-family config;
+  * plan/HPO plumbing: remat validation, searchable remat/kernels axes, and
+    the loud (not silent) softcap fallback.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.core import hpo
+from repro.core.compute import ComputePolicy
+from repro.kernels import ops
+from repro.kernels import ref
+from repro.models import layers
+from repro.models.model import Model
+
+
+# ---------------------------------------------------------------------------
+# Fused-kernel parity (fwd + grad) vs ref.py, under jit, interpret mode
+# ---------------------------------------------------------------------------
+
+def _grad_allclose(tree_a, tree_b, rtol, atol):
+    for a, b in zip(jax.tree.leaves(tree_a), jax.tree.leaves(tree_b)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=rtol, atol=atol)
+
+
+def test_rmsnorm_kernel_fwd_grad_parity_under_jit():
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    x = jax.random.normal(ks[0], (4, 96, 64))
+    w = 1.0 + 0.1 * jax.random.normal(ks[1], (64,))
+    f_k = jax.jit(lambda x, w: jnp.sum(ops.rmsnorm(x, w) ** 2))
+    f_r = jax.jit(lambda x, w: jnp.sum(ref.rmsnorm_ref(x, w) ** 2))
+    np.testing.assert_allclose(float(f_k(x, w)), float(f_r(x, w)), rtol=1e-5)
+    _grad_allclose(jax.grad(f_k, argnums=(0, 1))(x, w),
+                   jax.grad(f_r, argnums=(0, 1))(x, w), 1e-4, 1e-5)
+
+
+def test_swiglu_kernel_fwd_grad_parity_under_jit():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = jax.random.normal(ks[0], (64, 32))
+    w1 = jax.random.normal(ks[1], (32, 48)) * 0.1
+    w3 = jax.random.normal(ks[2], (32, 48)) * 0.1
+    f_k = jax.jit(lambda x, w1, w3: jnp.sum(ops.swiglu(x, w1, w3) ** 2))
+    f_r = jax.jit(lambda x, w1, w3: jnp.sum(ref.swiglu_ref(x, w1, w3) ** 2))
+    np.testing.assert_allclose(float(f_k(x, w1, w3)), float(f_r(x, w1, w3)),
+                               rtol=1e-5)
+    _grad_allclose(jax.grad(f_k, argnums=(0, 1, 2))(x, w1, w3),
+                   jax.grad(f_r, argnums=(0, 1, 2))(x, w1, w3), 1e-4, 1e-6)
+
+
+def test_cross_entropy_kernel_fwd_grad_parity_under_jit():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    h = jax.random.normal(ks[0], (128, 32)) * 0.5
+    w = jax.random.normal(ks[1], (32, 512)) * 0.1
+    y = jax.random.randint(ks[2], (128,), 0, 400)
+    # padded-vocab masking active (valid 400 of 512)
+    f_k = jax.jit(lambda h, w: jnp.mean(ops.cross_entropy_tokens(h, w, y, 400)))
+    f_r = jax.jit(lambda h, w: ref.cross_entropy_ref(h, w, y, valid_vocab=400))
+    np.testing.assert_allclose(float(f_k(h, w)), float(f_r(h, w)), rtol=1e-5)
+    _grad_allclose(jax.grad(f_k, argnums=(0, 1))(h, w),
+                   jax.grad(f_r, argnums=(0, 1))(h, w), 1e-4, 1e-6)
+
+
+def test_flash_gqa_unreplicated_kv_fwd_grad():
+    """The GQA fast path: KV stays at Hkv heads end-to-end; dk/dv come out
+    group-reduced and match the replicate-then-attend reference."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    B, S, Hq, Hkv, hd = 2, 64, 8, 2, 16
+    q = jax.random.normal(ks[0], (B, S, Hq, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+
+    def t(x):
+        return x.transpose(0, 2, 1, 3)
+
+    out = ops.flash_attention(q, k, v, causal=True)
+    expect = t(ref.flash_attention_ref(t(q), t(k), t(v), causal=True))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+    f_k = lambda q, k, v: jnp.sum(ops.flash_attention(q, k, v, causal=True) ** 2)
+    f_r = lambda q, k, v: jnp.sum(
+        t(ref.flash_attention_ref(t(q), t(k), t(v), causal=True)) ** 2)
+    gk = jax.grad(f_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_r, argnums=(0, 1, 2))(q, k, v)
+    assert gk[1].shape == (B, S, Hkv, hd)  # unreplicated dk
+    _grad_allclose(gk, gr, 1e-4, 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Remat policy: identical training math, policy-driven checkpointing
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    return get_config("yi-6b").reduced(n_layers=4, d_model=64, n_heads=4,
+                                       n_kv_heads=2, d_ff=128, vocab_size=256,
+                                       head_dim=16)
+
+
+def _run_losses(plan, n_steps=3, cfg=None):
+    from repro.data import SyntheticCorpus, make_batch_iterator
+    from repro.launch.mesh import mesh_for_plan
+    from repro.optim import AdamWConfig
+    from repro.runtime.train_loop import init_train_state, jit_train_step
+
+    cfg = cfg or _tiny_cfg()
+    model = Model(cfg, jnp.float32)
+    opt = AdamWConfig(lr=1e-3)
+    it = make_batch_iterator(SyntheticCorpus(vocab_size=cfg.vocab_size),
+                             seq_len=32, global_batch=4, prefetch=0)
+    mesh = mesh_for_plan(plan)
+    state = init_train_state(model, jax.random.PRNGKey(0), opt, plan)
+    step = jit_train_step(model, opt, plan, mesh, 4, 32)
+    losses = []
+    for _ in range(n_steps):
+        state, m = step(state, next(it))
+        losses.append(float(m["loss"]))
+    return losses
+
+
+def test_remat_policies_identical_loss_trajectory_pp1():
+    from repro.runtime.train_loop import ParallelPlan
+
+    ref_losses = _run_losses(ParallelPlan(precision="fp32", zero1=False))
+    for remat in ("selective", "none"):
+        losses = _run_losses(
+            ParallelPlan(precision="fp32", zero1=False, remat=remat))
+        np.testing.assert_allclose(losses, ref_losses, rtol=1e-6, atol=1e-6)
+
+
+REMAT_PP2_CODE = '''
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.optim import AdamWConfig
+from repro.runtime.train_loop import ParallelPlan, init_train_state, jit_train_step
+from repro.launch.mesh import mesh_for_plan, single_device_mesh
+from repro.data import SyntheticCorpus, make_batch_iterator
+
+cfg = get_config("yi-6b").reduced(n_layers=4, d_model=64, n_heads=4,
+                                  n_kv_heads=2, d_ff=128, vocab_size=256,
+                                  head_dim=16)
+model = Model(cfg, jnp.float32)
+opt = AdamWConfig(lr=1e-3)
+it = make_batch_iterator(SyntheticCorpus(vocab_size=cfg.vocab_size),
+                         seq_len=32, global_batch=8, prefetch=0)
+batches = [next(it) for _ in range(3)]
+
+def run(plan, mesh):
+    state = init_train_state(model, jax.random.PRNGKey(0), opt, plan)
+    step = jit_train_step(model, opt, plan, mesh, 8, 32)
+    out = []
+    for b in batches:
+        state, m = step(state, b)
+        out.append(float(m["loss"]))
+    return out
+
+ref = run(ParallelPlan(gas=1, precision="fp32", zero1=False, rules="dp_only"),
+          single_device_mesh())
+for remat in ("full", "selective", "none"):
+    plan = ParallelPlan(dp=2, tp=1, pp=2, gas=2, precision="fp32",
+                        remat=remat)
+    losses = run(plan, mesh_for_plan(plan))
+    np.testing.assert_allclose(losses, ref, rtol=1e-5, atol=1e-4), remat
+print("REMAT_PP2_OK")
+'''
+
+
+def test_remat_policies_identical_loss_trajectory_pp2(multidev):
+    out = multidev(REMAT_PP2_CODE, n_devices=4)
+    assert "REMAT_PP2_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Kernel fast path through the executor: every dense-family config
+# ---------------------------------------------------------------------------
+
+DENSE_ARCHS = [a for a in ASSIGNED if get_config(a).family == "dense"]
+
+
+@pytest.mark.parametrize("arch", DENSE_ARCHS)
+def test_kernels_plan_trains_dense_config_to_fp32_tolerance(arch):
+    from repro.runtime.train_loop import ParallelPlan
+
+    cfg = get_config(arch).reduced(n_layers=2, vocab_size=256)
+    ref_losses = _run_losses(ParallelPlan(precision="fp32", zero1=False),
+                             n_steps=2, cfg=cfg)
+    k_losses = _run_losses(
+        ParallelPlan(precision="fp32", zero1=False, kernels=True),
+        n_steps=2, cfg=cfg)
+    np.testing.assert_allclose(k_losses, ref_losses, rtol=1e-4, atol=1e-4)
+
+
+def test_kernels_policy_loss_matches_all_families_forward():
+    """Fused path engages for every family's loss (grad covered above for
+    dense; here forward parity guards the moe/ssm/rwkv/encdec/vlm wiring)."""
+    for arch in ("llama4-maverick-400b-a17b", "zamba2-2.7b", "rwkv6-1.6b"):
+        cfg = get_config(arch).reduced()
+        m_ref = Model(cfg, jnp.float32)
+        m_k = Model(cfg, jnp.float32, compute=ComputePolicy(kernels=True))
+        params = m_ref.init(jax.random.PRNGKey(0))
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32),
+                                              0, cfg.vocab_size)}
+        l_ref, _ = m_ref.loss(params, batch)
+        l_k, _ = m_k.loss(params, batch)
+        np.testing.assert_allclose(float(l_k), float(l_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Plan / HPO plumbing + fallback behaviour
+# ---------------------------------------------------------------------------
+
+def test_parallel_plan_validates_remat():
+    from repro.runtime.train_loop import ParallelPlan
+
+    with pytest.raises(ValueError):
+        ParallelPlan(remat="sometimes")
+    plan = ParallelPlan(remat="selective", kernels=True)
+    pol = plan.compute_policy()
+    assert pol == ComputePolicy(remat="selective", kernels=True)
+    with pytest.raises(ValueError):
+        ComputePolicy(remat="bogus")
+
+
+def test_compute_policy_checkpoint_modes():
+    def f(c, x):
+        return c + x, None
+
+    full = ComputePolicy("full").checkpoint(f)
+    sel = ComputePolicy("selective").checkpoint(f)
+    none = ComputePolicy("none").checkpoint(f)
+    assert none is f
+    for wrapped in (full, sel):
+        y, _ = wrapped(jnp.float32(1.0), jnp.float32(2.0))
+        assert float(y) == 3.0
+
+
+def test_trial_plan_carries_compute_policy():
+    plan = hpo.trial_plan({"pp": 2, "tp": 4, "gas": 5, "zero1": 1,
+                           "nnodes": 16, "remat": "selective", "kernels": 1})
+    assert plan.remat == "selective" and plan.kernels is True
+    # defaults: seed-equivalent compute path
+    plan = hpo.trial_plan({"pp": 2, "tp": 4, "nnodes": 16})
+    assert plan.remat == "full" and plan.kernels is False
+
+
+def test_space_compute_is_searchable():
+    names = [p.name for p in hpo.SPACE_COMPUTE]
+    assert "remat" in names and "kernels" in names
+    # categorical axes encode without blowing up the surrogate
+    cfg = {p.name: p.values[0] for p in hpo.SPACE_COMPUTE}
+    cfg["remat"] = "selective"
+    x = hpo._encode(hpo.SPACE_COMPUTE, cfg)
+    assert x.shape == (len(hpo.SPACE_COMPUTE),)
+    assert np.isfinite(x).all() and x[names.index("remat")] == 0.5
+
+
+def test_softcap_flash_fallback_warns_and_matches_jnp():
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (1, 16, 4, 8))
+    k = jax.random.normal(ks[1], (1, 16, 2, 8))
+    v = jax.random.normal(ks[2], (1, 16, 2, 8))
+    with pytest.warns(UserWarning, match="softcap"):
+        out = layers.attention(q, k, v, causal=True, softcap=30.0,
+                               use_flash=True)
+    ref_out = layers.attention(q, k, v, causal=True, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=1e-6, atol=1e-6)
