@@ -7,10 +7,13 @@
 #                 virtual devices: proves the unified 3D executor end-to-end
 #   make bench  - smoke-sized (remat x kernels x plan) train-step benchmark;
 #                 writes + schema-validates BENCH_train_step.json
+#   make bench-pp - family x pp matrix (every family pipelined via the
+#                 StageProgram IR, incl. interleaved v=2); writes +
+#                 validates BENCH_pp_families.json
 
 PY := python
 
-.PHONY: test lint smoke bench
+.PHONY: test lint smoke bench bench-pp
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -29,3 +32,9 @@ bench:
 	    --out BENCH_train_step.json
 	PYTHONPATH=src $(PY) benchmarks/bench_train_step.py \
 	    --validate BENCH_train_step.json
+
+bench-pp:
+	PYTHONPATH=src $(PY) benchmarks/bench_pp_families.py --devices 2 \
+	    --out BENCH_pp_families.json
+	PYTHONPATH=src $(PY) benchmarks/bench_pp_families.py \
+	    --validate BENCH_pp_families.json

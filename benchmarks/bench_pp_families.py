@@ -1,0 +1,184 @@
+"""bench_pp_families: wall-time of ``jit_train_step`` across the
+family x pp matrix the StageProgram IR opened up — every model family
+(dense / moe / hybrid / rwkv / encdec / vlm) at pp=1 and pp=2 (plus an
+interleaved virtual_stages=2 point), on smoke-sized configs.
+
+Each pp>1 point's loss trajectory is asserted against its own pp=1
+baseline at the same gas (fp32), so the matrix doubles as an equivalence
+check: the pipeline is pure scheduling for every family.
+
+  PYTHONPATH=src python benchmarks/bench_pp_families.py --out BENCH_pp_families.json
+  make bench-pp
+
+Schema:
+
+  {"config": {seq_len, global_batch, steps, devices, backend,
+              kernels_interpret_mode, precision},
+   "points": [{"family": str, "arch": str, "plan": {dp, tp, pp, v, gas},
+               "compile_s": float, "wall_s_per_step": float,
+               "tokens_per_s": float, "losses": [float, ...]}, ...]}
+
+``backend``/``devices``/``kernels_interpret_mode`` carry the same
+machine-readable CPU caveat as BENCH_train_step.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+LOSS_TOL = 1e-4
+
+# (arch, reduced overrides): unit counts chosen so pp=2 x v=2 tiles every
+# family's StageProgram (moe: n_stack=4; hybrid: n_super=4)
+FAMILY_CASES = {
+    "dense": ("yi-6b", dict(n_layers=4)),
+    "moe": ("llama4-maverick-400b-a17b", dict(n_layers=8)),
+    "hybrid": ("zamba2-2.7b", dict(n_layers=8, hybrid_attn_every=2)),
+    "rwkv": ("rwkv6-1.6b", dict(n_layers=4)),
+    "encdec": ("seamless-m4t-medium", dict(n_layers=4, enc_layers=2,
+                                           enc_seq_len=32)),
+    "vlm": ("internvl2-2b", dict(n_layers=4, num_patches=8)),
+}
+
+
+def validate(path: str) -> None:
+    with open(path) as f:
+        rec = json.load(f)
+    assert {"config", "points"} <= set(rec), path
+    cfg = rec["config"]
+    assert {"devices", "backend", "kernels_interpret_mode"} <= set(cfg), cfg
+    assert cfg["kernels_interpret_mode"] == (cfg["backend"] == "cpu"), cfg
+    by_fam: dict = {}
+    for p in rec["points"]:
+        assert {"family", "arch", "plan", "wall_s_per_step", "losses"} <= set(p), p
+        by_fam.setdefault(p["family"], {})[
+            (p["plan"]["pp"], p["plan"]["v"])] = p
+    for fam, pts in by_fam.items():
+        assert (1, 1) in pts, f"{fam}: missing pp=1 baseline"
+        ref = pts[(1, 1)]["losses"]
+        for key, p in pts.items():
+            drift = max(abs(a - b) for a, b in zip(p["losses"], ref))
+            assert drift <= LOSS_TOL, (
+                f"{fam} pp={key[0]} v={key[1]} loss drifts {drift:.2e} "
+                f"from the pp=1 trajectory")
+        assert len(pts) >= 2, f"{fam}: no pipelined point"
+    print(f"{path}: schema + pp-equivalence OK ({len(rec['points'])} points)")
+
+
+def run_bench(args) -> dict:
+    import time
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.data import SyntheticCorpus, make_batch_iterator
+    from repro.launch.mesh import mesh_for_plan, single_device_mesh
+    from repro.models.model import Model
+    from repro.optim import AdamWConfig
+    from repro.runtime.train_loop import (ParallelPlan, init_train_state,
+                                          jit_train_step)
+
+    n_dev = jax.device_count()
+    assert n_dev >= 2, "bench-pp needs >= 2 devices (use --devices 2)"
+    points = []
+    for fam, (arch, kw) in FAMILY_CASES.items():
+        cfg = get_config(arch).reduced(
+            d_model=128, n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=256,
+            head_dim=32, ssm_head_dim=32, **kw)
+        model = Model(cfg, jnp.float32)
+        opt = AdamWConfig(lr=1e-3)
+        extra = {}
+        if cfg.family == "encdec":
+            extra["frames"] = ((cfg.enc_seq_len, cfg.frontend_dim),
+                               np.dtype("float32"))
+        if cfg.family == "vlm":
+            extra["patches"] = ((cfg.num_patches, cfg.frontend_dim),
+                                np.dtype("float32"))
+        it = make_batch_iterator(
+            SyntheticCorpus(vocab_size=cfg.vocab_size), seq_len=args.seq_len,
+            global_batch=args.global_batch, prefetch=0,
+            extra_specs=extra or None)
+        batches = [next(it) for _ in range(args.steps + 1)]
+
+        plans = [
+            (ParallelPlan(gas=2, precision="fp32", zero1=False,
+                          rules="dp_only"), single_device_mesh()),
+        ]
+        pp2 = ParallelPlan(dp=n_dev // 2, tp=1, pp=2, gas=2,
+                           precision="fp32", zero1=False)
+        plans.append((pp2, mesh_for_plan(pp2)))
+        import dataclasses
+        v2 = dataclasses.replace(pp2, virtual_stages=2)
+        plans.append((v2, mesh_for_plan(v2)))
+
+        for plan, mesh in plans:
+            state = init_train_state(model, jax.random.PRNGKey(0), opt, plan)
+            step = jit_train_step(model, opt, plan, mesh,
+                                  args.global_batch, args.seq_len)
+            t0 = time.perf_counter()
+            state, m = step(state, batches[0])
+            jax.block_until_ready(state)
+            compile_s = time.perf_counter() - t0
+            losses, walls = [float(m["loss"])], []
+            for b in batches[1:]:
+                t0 = time.perf_counter()
+                state, m = step(state, b)
+                jax.block_until_ready(state)
+                walls.append(time.perf_counter() - t0)
+                losses.append(float(m["loss"]))
+            wall = float(np.min(walls))
+            rec = {
+                "family": fam, "arch": cfg.name,
+                "plan": {"dp": plan.dp, "tp": plan.tp, "pp": plan.pp,
+                         "v": plan.virtual_stages, "gas": plan.gas},
+                "compile_s": round(compile_s, 3),
+                "wall_s_per_step": round(wall, 5),
+                "tokens_per_s": round(
+                    args.global_batch * args.seq_len / wall, 1),
+                "losses": losses,
+            }
+            points.append(rec)
+            print(f"{fam:7s} pp={plan.pp} v={plan.virtual_stages} | "
+                  f"{wall*1e3:8.2f} ms/step (compile {compile_s:.1f}s) "
+                  f"loss0 {losses[0]:.5f}")
+
+    backend = jax.default_backend()
+    return {
+        "config": {"seq_len": args.seq_len,
+                   "global_batch": args.global_batch, "steps": args.steps,
+                   "devices": n_dev, "backend": backend,
+                   "precision": "fp32",
+                   "kernels_interpret_mode": backend == "cpu"},
+        "points": points,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=4)
+    ap.add_argument("--devices", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_pp_families.json")
+    ap.add_argument("--validate", metavar="PATH", default=None)
+    args = ap.parse_args()
+
+    if args.validate:
+        validate(args.validate)
+        return
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+    rec = run_bench(args)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"wrote {args.out} ({len(rec['points'])} points)")
+    validate(args.out)
+
+
+if __name__ == "__main__":
+    main()

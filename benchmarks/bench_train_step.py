@@ -12,10 +12,16 @@ policies can be compared *at verified-identical training math*.
 Schema (validated by ``--validate``, wired into ``make bench``):
 
   {"config": {arch, d_model, n_layers, seq_len, global_batch, steps, devices,
-              backend, precision},
+              backend, precision, kernels_interpret_mode},
    "points": [{"plan": {dp, tp, pp, gas}, "remat": str, "kernels": bool,
                "compile_s": float, "wall_s_per_step": float,
                "tokens_per_s": float, "losses": [float, ...]}, ...]}
+
+``backend``/``devices`` record ``jax.default_backend()`` and the device
+count of the run; ``kernels_interpret_mode`` flags the CPU caveat
+machine-readably: when true, every kernels=True point timed the Pallas
+kernels in interpret mode, so those walls are correctness timings, not
+kernel perf — consumers must not compare them across backends.
 
 Notes: the smoke shape is matmul-dominated (d=512, ff=2048, S=64) so the
 remat tradeoff is visible on CPU — full remat re-runs every projection/MLP
@@ -48,9 +54,15 @@ def validate(path: str) -> None:
         rec = json.load(f)
     assert {"config", "points"} <= set(rec), f"missing top-level keys in {path}"
     cfgkeys = {"arch", "d_model", "n_layers", "seq_len", "global_batch",
-               "steps", "devices", "backend", "precision"}
+               "steps", "devices", "backend", "precision",
+               "kernels_interpret_mode"}
     assert cfgkeys <= set(rec["config"]), (
         f"config keys missing: {cfgkeys - set(rec['config'])}")
+    cfg = rec["config"]
+    assert isinstance(cfg["devices"], int) and cfg["devices"] >= 1, cfg
+    # the CPU-interpret caveat must be recorded consistently with the
+    # backend that produced the numbers
+    assert cfg["kernels_interpret_mode"] == (cfg["backend"] == "cpu"), cfg
     assert rec["points"], "no benchmark points"
     for p in rec["points"]:
         assert POINT_KEYS <= set(p), f"point keys missing: {POINT_KEYS - set(p)}"
@@ -173,12 +185,16 @@ def run_bench(args) -> dict:
                   f"{rec['tokens_per_s']:>10,.0f} tok/s "
                   f"(compile {rec['compile_s']:.1f}s) loss0 {rec['losses'][0]:.5f}")
 
+    backend = jax.default_backend()
     return {
         "config": {"arch": args.arch, "d_model": args.d_model,
                    "n_layers": args.n_layers, "seq_len": args.seq_len,
                    "global_batch": args.global_batch, "steps": args.steps,
-                   "devices": n_dev, "backend": jax.default_backend(),
-                   "precision": args.precision},
+                   "devices": n_dev, "backend": backend,
+                   "precision": args.precision,
+                   # machine-readable CPU caveat: kernels=True points ran
+                   # the Pallas kernels in interpret mode on this backend
+                   "kernels_interpret_mode": backend == "cpu"},
         "points": points,
     }
 

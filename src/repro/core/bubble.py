@@ -35,6 +35,25 @@ def pipeline_efficiency(p: int, m: int, v: int = 1, schedule: str = "1f1b") -> f
     return 1.0 - bubble_fraction(p, m, v, schedule=schedule)
 
 
+def wave_bubble_fraction(p: int, m: int, v: int) -> float:
+    """Bubble of the *wave-based* interleaved schedule the GSPMD executor
+    realizes for ``virtual_stages > 1`` (``core/pipeline.py:pipeline_spmd``):
+    microbatches enter in waves of at most ``p``; each wave drains in
+    ``S + p - 1`` ticks of one 1/v-depth stage-application per rank.
+
+    Equals the analytic ``bubble_fraction(p, m, v, "1f1b_interleaved")``
+    whenever ``p`` divides ``m`` and ``m <= p`` per wave (i.e. for full
+    waves), and — unlike the contiguous fine-grained split whose bubble
+    ``(S-1)/(m+S-1)`` grows with ``S = p*v`` — it *shrinks* with ``v``.
+    """
+    if p <= 1:
+        return 0.0
+    S = p * v
+    waves = -(-m // p)
+    ticks = waves * (S + p - 1)
+    return 1.0 - (m * S) / (p * ticks)
+
+
 @dataclasses.dataclass(frozen=True)
 class PipelineMemory:
     """Peak in-flight activation copies per device (relative units)."""

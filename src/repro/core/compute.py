@@ -27,9 +27,10 @@ Two knobs:
     the attention q-chunk scan and the chunked-CE loss tail — their
     recompute is what keeps the O(Sq x Skv) scores / (N, V) logits from
     ever materializing, which no remat mode should undo.
-  * ``kernels`` — route norm / MLP-gate / attention / cross-entropy through
-    the fused Pallas kernels in ``repro.kernels`` (interpret-mode on CPU,
-    Mosaic on TPU) instead of the jnp reference formulations.
+  * ``kernels`` — route norm (rmsnorm + layernorm) / MLP gate (swiglu +
+    gelu) / attention / cross-entropy through the fused Pallas kernels in
+    ``repro.kernels`` (interpret-mode on CPU, Mosaic on TPU) instead of
+    the jnp reference formulations.
 """
 from __future__ import annotations
 

@@ -42,6 +42,14 @@ SPACE_COMPUTE = SPACE_175B + (
     Param("kernels", (0, 1)),
 )
 
+# Megatron-style interleaved virtual staging: now that the StageProgram IR
+# pipelines every model family and the GSPMD path realizes the
+# interleaved-1F1B schedule (bubble (p-1)/(v*m+p-1), shrinking with v),
+# the v axis is searchable alongside the decomposition
+SPACE_INTERLEAVED = SPACE_COMPUTE + (
+    Param("vs", (1, 2, 4)),
+)
+
 
 def trial_plan(config: dict, *, gpus_per_node: int = 8,
                rules: str = "megatron_tp", precision: str = "bf16"):
@@ -64,6 +72,7 @@ def trial_plan(config: dict, *, gpus_per_node: int = 8,
         return None
     return ParallelPlan(
         dp=world // (tp * pp), tp=tp, pp=pp,
+        virtual_stages=int(config.get("vs", 1)),
         gas=int(config.get("gas", 1)), zero1=bool(config.get("zero1", True)),
         rules=rules, precision=precision,
         remat=str(config.get("remat", "full")),

@@ -25,11 +25,20 @@ Two implementations coexist:
     the stage dim plus ``jnp.roll`` shifts under plain GSPMD.  XLA lowers
     the roll of a pipe-sharded dim to the same collective-permute as the
     manual ring, while the "data"/"model" axes stay auto-sharded — this is
-    what lets one ``jit_train_step`` express any (dp, tp, pp) plan.
+    what lets one ``jit_train_step`` express any (dp, tp, pp) plan.  It
+    moves arbitrary *payload pytrees* (activations + the StageProgram
+    carries: MoE aux accumulators, encdec cross-attention memory) and, for
+    ``virtual_stages > 1``, realizes Megatron's interleaved-1F1B
+    round-robin stage assignment whose bubble shrinks with v
+    (:func:`spmd_idle_fraction` vs ``core/bubble.py``).
+
+Stage functions for any model family come from
+``repro.core.stage_program.split_stages`` (the family-agnostic IR);
+:func:`layer_stage_fn` adapts a bare ``layer_fn`` through the same IR for
+the manual-ring/analysis paths.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax
@@ -166,89 +175,194 @@ def pipeline_apply_interleaved(
     return apply
 
 
+def _waves(p: int, m: int) -> list[tuple[int, int]]:
+    """Interleaved schedule: microbatches enter in waves of at most ``p``."""
+    return [(s, min(p, m - s)) for s in range(0, m, p)]
+
+
+def spmd_schedule(p: int, m: int, v: int = 1) -> tuple[int, int, int]:
+    """The realized tick schedule of :func:`pipeline_spmd`:
+    ``(total_ticks, stage_applications_per_tick_per_ring, useful_applications)``.
+
+    These are the very numbers that size the implementation's scans (the
+    v==1 path runs one ``m + S - 1``-tick scan applying all ``p*v`` logical
+    stages per tick; the v>1 interleaved path runs ``ceil(m/p)`` waves of
+    ``S + p - 1`` ticks applying one logical stage per rank per tick), so
+    the idle fraction derived from them is the *measured* bubble of the
+    executor, not a re-derivation of the analytic model.
+    """
+    S = v * p
+    if v == 1:
+        return m + S - 1, p * v, m * S
+    ticks = sum(S + p - 1 for _ in _waves(p, m))
+    return ticks, p, m * S
+
+
+def spmd_idle_fraction(p: int, m: int, v: int = 1) -> float:
+    """Measured idle fraction of the GSPMD pipeline's schedule; compare to
+    ``core.bubble.bubble_fraction`` (exactly equal for v==1/GPipe, and for
+    the interleaved path on a single full wave, ``m == p`` — with multiple
+    waves each drains fully before the next injects, so the realized value
+    is the per-wave bubble, not the analytic ``(p-1)/(v*m+p-1)``)."""
+    if p <= 1:
+        return 0.0
+    ticks, per_tick, useful = spmd_schedule(p, m, v)
+    return 1.0 - useful / (ticks * per_tick)
+
+
 def pipeline_spmd(
-    stage_fn: Callable[[Any, jax.Array], jax.Array],
+    stage_fn: Callable[[Any, Any], Any],
     mesh: Mesh,
     *,
     n_stages: int,
     v: int = 1,
     pipe_axis: str = "pipe",
     data_axis: str = "data",
-) -> Callable[[Any, jax.Array], jax.Array]:
+) -> Callable[[Any, Any], Any]:
     """GSPMD circular pipeline — composes with auto TP/DP axes.
 
-    Returns ``pipelined(stacked_stage_params, microbatches)`` where
+    Returns ``pipelined(stacked_stage_params, payload)`` where
 
       * ``stacked_stage_params``: pytree with leading dim ``v * n_stages``
-        (logical stage ``s`` runs on pipe-rank ``s // v``: each rank hosts
-        a *contiguous* block of ``v`` stages, so block-sharding the layer
-        stack over the pipe axis makes the stage split a local reshape —
-        no cross-pipe resharding of parameters),
-      * ``microbatches``: ``(m, mbs, ...)``,
+        in logical-stage order (produced by
+        ``core.stage_program.split_stages`` for any model family),
+      * ``payload``: the pytree that flows through the ring — a bare
+        ``(m, mbs, ...)`` microbatch array, or a dict
+        ``{"x": activations, **carries}`` whose extra leaves (MoE aux
+        accumulators, encdec cross-attention memory) ride the same
+        collective-permute channel as the activations,
 
-    and the result is ``(m, mbs, ...)`` after all ``v * n_stages`` stages.
+    and the result has the same structure after all ``v * n_stages``
+    logical stages.  ``stage_fn(stage_params_slice, payload_slice)``
+    applies one logical stage.
 
-    Mechanics: a ``(p, v, mbs, ...)`` in-flight buffer holds what every
-    logical stage is processing; each tick applies ``vmap(vmap(stage_fn))``
-    over the (pipe, slot) dims and advances the buffer one logical stage
-    (slot-local shift, plus a ``jnp.roll`` over the pipe-sharded dim for
-    the block boundary — lowered by XLA to the cross-stage
-    collective-permute).  Microbatch j enters logical stage 0 at tick j
-    and exits stage ``S-1`` at tick ``j + S - 1``; total ticks
-    ``T = m + S - 1`` give the GPipe bubble ``(S-1)/(m+S-1)`` for
-    ``S = v * p`` logical stages (see ``core/bubble.py``).  Note ``v > 1``
-    here is a *finer-grained* pipeline (more, smaller cross-stage
-    transfers; slightly larger bubble), not Megatron's interleaved 1F1B
-    schedule whose bubble *shrinks* with v — that schedule exists in the
-    manual ring (:func:`pipeline_apply_interleaved`) and analytically in
-    ``core/bubble.py``.  No manual collectives: the "data"/"model" mesh
-    axes remain auto, so TP-sharded stage params and DP-sharded
-    microbatches work unchanged inside ``stage_fn``.
+    ``v == 1`` (and the contiguous stage assignment it implies — logical
+    stage ``s`` on pipe-rank ``s``): a ``(p, 1, mbs, ...)``-per-leaf
+    in-flight buffer, one tick per microbatch-advance; total ticks
+    ``m + S - 1`` give the GPipe bubble ``(S-1)/(m+S-1)``
+    (``core/bubble.py``).
+
+    ``v > 1`` — **interleaved-1F1B virtual staging** (Megatron §2.2): the
+    ``S = v*p`` logical stages are assigned *round-robin*, rank ``d``
+    hosting stages ``{d, d+p, ..., d+(v-1)p}``, and activations loop the
+    ring ``v`` times.  Microbatches enter in waves of at most ``p``; each
+    wave drains in ``S + p - 1`` ticks of *one* stage-application per rank
+    (each application is a 1/v-depth stage chunk), so the realized bubble
+    is ``(p-1)/(v*m + p - 1)`` for ``m = p`` per wave — *shrinking* with
+    ``v`` exactly as ``core/bubble.py``'s interleaved model, instead of the
+    contiguous assignment's ``(S-1)/(m+S-1)`` that grows with ``S``.  The
+    tradeoffs are Megatron's: v× more, 1/v-sized cross-stage transfers per
+    microbatch, and the round-robin assignment means the pipe-sharded layer
+    stack is regathered once per step (GSPMD inserts the reshard) instead
+    of the contiguous split's free local reshape.
+
+    No manual collectives in either mode: the advance is a ``jnp.roll``
+    over the pipe-sharded buffer dim (lowered by XLA to a
+    collective-permute) and the "data"/"model" mesh axes remain auto, so
+    TP-sharded stage params and DP-sharded microbatches work unchanged
+    inside ``stage_fn``.
     """
     p = n_stages
     S = v * p
 
-    def _constraint(mbs: int):
+    def _keep(tree, lead: int):
+        """Per-leaf sharding constraint: pipe on dim 0 of every payload
+        leaf — what makes XLA lower the ring advance to a
+        collective-permute.  The microbatch dim is left to propagation:
+        pinning it to the data axis here miscompiles the hybrid (mamba)
+        stage bodies on the XLA CPU partitioner (wrong numerics, not an
+        error — same compiler family as the shard_map gotchas in
+        .claude/skills/verify), and GSPMD recovers the DP sharding from
+        the batch inputs anyway."""
         if pipe_axis not in mesh.shape or mesh.shape[pipe_axis] <= 1:
-            return None
-        dp = mesh.shape.get(data_axis, 1) if data_axis in mesh.shape else 1
-        batch = data_axis if (dp > 1 and mbs % dp == 0) else None
-        return NamedSharding(mesh, P(pipe_axis, None, batch))
+            return tree
 
-    def pipelined(stacked_stage_params, micro):
-        m = micro.shape[0]
+        def one(x):
+            parts = [pipe_axis] + [None] * min(lead - 1, x.ndim - 1)
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*parts)))
+        return jax.tree.map(one, tree)
+
+    def _index(tree, i):
+        return jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            tree)
+
+    def pipelined_contiguous(stacked_stage_params, micro):
+        m = jax.tree.leaves(micro)[0].shape[0]
         stages = jax.tree.map(
             lambda a: a.reshape(p, v, *a.shape[1:]), stacked_stage_params)
-        sh = _constraint(micro.shape[1])
 
-        def keep(x):
-            return x if sh is None else jax.lax.with_sharding_constraint(x, sh)
-
-        buf = keep(jnp.zeros((p, v) + micro.shape[1:], micro.dtype))
+        buf = _keep(jax.tree.map(
+            lambda a: jnp.zeros((p, v) + a.shape[1:], a.dtype), micro), 2)
 
         def tick(buf, t):
             mb = jnp.clip(t, 0, m - 1)
-            x0 = jax.lax.dynamic_index_in_dim(micro, mb, 0, keepdims=False)
-            buf = buf.at[0, 0].set(x0.astype(buf.dtype))
-            out = jax.vmap(jax.vmap(stage_fn))(stages, keep(buf))
-            out = keep(out)
-            y = out[-1, -1]
+            x0 = _index(micro, mb)
+            buf = jax.tree.map(
+                lambda b, x: b.at[0, 0].set(x.astype(b.dtype)), buf, x0)
+            out = jax.vmap(jax.vmap(stage_fn))(stages, _keep(buf, 2))
+            out = _keep(out, 2)
+            y = jax.tree.map(lambda o: o[-1, -1], out)
             # advance every in-flight microbatch one logical stage
             # (s = d*v + slot): slots shift locally within each pipe rank;
             # the slot=0 column is fed by the previous rank's last slot —
             # the only cross-pipe transfer, one collective-permute per tick
-            nxt = jnp.roll(out, 1, axis=1)
-            nxt = nxt.at[:, 0].set(jnp.roll(out[:, -1], 1, axis=0))
-            return keep(nxt), y
+            nxt = jax.tree.map(lambda o: jnp.roll(o, 1, axis=1), out)
+            nxt = jax.tree.map(
+                lambda n, o: n.at[:, 0].set(jnp.roll(o[:, -1], 1, axis=0)),
+                nxt, out)
+            return _keep(nxt, 2), y
 
         _, ys = jax.lax.scan(tick, buf, jnp.arange(m + S - 1))
-        return jax.lax.dynamic_slice_in_dim(ys, S - 1, m, axis=0)
+        return jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, S - 1, m, axis=0), ys)
 
-    return pipelined
+    def pipelined_interleaved(stacked_stage_params, micro):
+        m = jax.tree.leaves(micro)[0].shape[0]
+        # round-robin assignment: [d, k] = logical stage k*p + d
+        stages = jax.tree.map(
+            lambda a: a.reshape(v, p, *a.shape[1:]).swapaxes(0, 1),
+            stacked_stage_params)
+        d_idx = jnp.arange(p)
+
+        def run_wave(w_start: int, w: int):
+            buf = _keep(jax.tree.map(
+                lambda a: jnp.zeros((p,) + a.shape[1:], a.dtype), micro), 1)
+
+            def tick(buf, t):
+                # rank d serves the microbatch at logical stage s = t - j
+                # (j its injection tick); its local slot is s // p
+                slot = jnp.clip((t - d_idx) // p, 0, v - 1)
+                mb = jnp.clip(w_start + t, w_start, m - 1)
+                x0 = _index(micro, mb)
+                inject = t < w  # rank 0 is at slot 0 while t < w <= p
+                buf = jax.tree.map(
+                    lambda b, x: b.at[0].set(
+                        jnp.where(inject, x.astype(b.dtype), b[0])), buf, x0)
+                lp = jax.tree.map(lambda a: a[d_idx, slot], stages)
+                out = jax.vmap(stage_fn)(lp, _keep(buf, 1))
+                out = _keep(out, 1)
+                y = jax.tree.map(lambda o: o[-1], out)
+                nxt = jax.tree.map(lambda o: jnp.roll(o, 1, axis=0), out)
+                return _keep(nxt, 1), y
+
+            _, ys = jax.lax.scan(tick, buf, jnp.arange(S + p - 1))
+            return jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, S - 1, w, axis=0),
+                ys)
+
+        outs = [run_wave(w_start, w) for w_start, w in _waves(p, m)]
+        if len(outs) == 1:
+            return outs[0]
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *outs)
+
+    return pipelined_contiguous if v == 1 else pipelined_interleaved
 
 
 def stack_stages(stacked_layers: Any, n_stages: int) -> Any:
-    """(L, ...) layer-stacked params -> (n_stages, L/p, ...)."""
+    """(L, ...) layer-stacked params -> (n_stages, L/p, ...) — the
+    single-segment case of ``core.stage_program.split_stages``."""
     def reshape(a):
         L = a.shape[0]
         assert L % n_stages == 0, (L, n_stages)
@@ -258,25 +372,29 @@ def stack_stages(stacked_layers: Any, n_stages: int) -> Any:
 
 def layer_stage_fn(layer_fn: Callable[[Any, jax.Array], jax.Array],
                    remat: bool = False, *, policy: Any = None):
-    """stage_fn that scans ``layer_fn`` over the stage's layer slice.
+    """stage_fn that scans ``layer_fn`` over the stage's layer slice, by
+    wrapping it as a one-segment carry-less StageProgram and running the
+    IR executor.
 
     ``policy`` (a :class:`repro.core.compute.ComputePolicy`) drives the
     per-layer rematerialization — the same selectable activation-checkpoint
-    policy as the non-pipelined layer stack in ``models/model.py``.  The
-    legacy ``remat=True`` flag is equivalent to the default "full" policy.
+    policy as every StageProgram segment.  The legacy ``remat=True`` flag
+    maps to the "full" policy; ``remat=False`` (no wrapping) to "none".
     """
-    if policy is not None:
-        wrap = policy.checkpoint
-    elif remat:
-        wrap = jax.checkpoint
-    else:
-        def wrap(fn):
-            return fn
+    from repro.core import stage_program as sp
+    from repro.core.compute import ComputePolicy
+
+    if policy is None:
+        policy = ComputePolicy("full" if remat else "none")
+
+    def body(lp, x, carry):
+        return layer_fn(lp, x), carry
 
     def stage(stage_params, x):
-        def body(c, lp):
-            return layer_fn(lp, c), None
-        y, _ = jax.lax.scan(wrap(body), x, stage_params)
+        n = jax.tree.leaves(stage_params)[0].shape[0]
+        prog = sp.StageProgram(
+            (sp.Segment("layers", stage_params, n, body),), carry_spec=())
+        y, _ = sp.run_program(prog, x, {}, policy=policy)
         return y
     return stage
 

@@ -1,0 +1,237 @@
+"""StageProgram: the family-agnostic pipeline IR.
+
+Every model family lowers its layer stack into a *program*: an ordered list
+of :class:`Segment`\\ s, each a uniform scannable unit
+
+    ``(stacked_params, scan_body, n_units)``  with
+    ``scan_body(params_slice, x, carry) -> (x, carry)``
+
+plus a :class:`CarrySpec` tuple declaring the residual state that rides
+along with the activation ``x``:
+
+  * ``"accum"`` carries are per-microbatch fp32 accumulators initialised to
+    zero (the MoE aux-loss term); they cross stage boundaries on the same
+    collective-permute channel as ``x`` and are reduced into the loss after
+    the last segment.
+  * ``"input"`` carries are per-microbatch read-only inputs (the encdec
+    cross-attention memory): each microbatch's slice enters the pipeline at
+    stage 0 and travels with its activation, so every decoder stage sees
+    the right memory without replicating the full-batch tensor per stage.
+
+RWKV/SSM recurrent state is *sequence*-level and layer-local in training
+(each layer re-initialises it at t=0), so it never crosses a segment
+boundary and does not appear in the carry — only decode threads it, through
+the cache.
+
+The same program drives both executors:
+
+  * :func:`run_program` — the non-pipelined path: one ``lax.scan`` per
+    segment (exactly the old per-family ``_run_stack`` ladders, unified).
+  * :func:`split_stages` — the pipelined path: cut the program into
+    ``n_stages`` structurally-identical stages and emit the
+    ``stage_fn(stage_params, payload)`` + stacked stage params that
+    ``repro.core.pipeline.pipeline_spmd`` consumes.  Single-segment
+    programs split on the unit axis (the (S, n/S) reshape stays a local
+    reshape of the pipe-sharded layer stack); multi-segment programs
+    (hybrid's tagged ``[mamba, shared]*n_super`` sequence) split on the
+    segment list.
+
+fp32 microbatch gradient accumulation: ``StageProgram.cast`` (the
+storage->compute dtype cast) is applied to the params slice *inside* every
+scan body, so the parameters entering each scan iteration are the fp32
+storage leaves.  The scan transpose therefore accumulates the per-iteration
+(= per-microbatch, in the pipelined tick scan) parameter cotangents in
+fp32 — the pipelined path's equivalent of the pp==1 outer accumulation
+scan's ``gsum + g.astype(f32)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compute import ComputePolicy, resolve as resolve_policy
+
+FAMILIES = ("dense", "moe", "hybrid", "rwkv", "encdec", "vlm")
+
+ACCUM = "accum"
+INPUT = "input"
+
+
+def unknown_family(cfg: Any) -> None:
+    """The single exhaustive-family error: every ``if family ...`` ladder
+    falls through to this instead of a bare ``ValueError(cfg.family)``."""
+    name = getattr(cfg, "name", None)
+    where = f" (arch {name!r})" if name else ""
+    raise ValueError(
+        f"unknown model family {getattr(cfg, 'family', cfg)!r}{where}; "
+        f"supported families: {', '.join(FAMILIES)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CarrySpec:
+    """One entry of the cross-stage carry contract."""
+    name: str
+    kind: str  # "accum" | "input"
+
+    def __post_init__(self):
+        if self.kind not in (ACCUM, INPUT):
+            raise ValueError(f"carry kind must be accum|input, got {self.kind!r}")
+
+
+@dataclasses.dataclass
+class Segment:
+    """A uniform scannable run of layers: ``body`` applied ``n`` times over
+    the leading dim of ``params`` (storage dtype — the executor casts).
+
+    ``tied=True`` marks a weight-tied segment (hybrid's shared attention
+    block): every occurrence in the program references the *same* params,
+    so the stage splitter closes over them instead of stacking per-stage
+    copies — the honest tying semantics (one tensor, cotangents summed
+    across stages by autodiff), and it also sidesteps an XLA CPU SPMD
+    partitioner miscompile of broadcast-stacked params feeding the
+    stage vmap (wrong numerics, silently)."""
+    name: str
+    params: Any
+    n: int
+    body: Callable[[Any, jax.Array, dict], tuple[jax.Array, dict]]
+    tied: bool = False
+
+
+@dataclasses.dataclass
+class StageProgram:
+    segments: tuple[Segment, ...]
+    carry_spec: tuple[CarrySpec, ...] = (CarrySpec("aux", ACCUM),)
+    # storage->compute dtype cast applied to params slices INSIDE scan
+    # bodies (None = params are already compute dtype)
+    cast: Callable[[Any], Any] | None = None
+
+    def init_carry(self, inputs: dict | None = None) -> dict:
+        inputs = inputs or {}
+        carry = {}
+        for cs in self.carry_spec:
+            if cs.kind == ACCUM:
+                carry[cs.name] = jnp.float32(0.0)
+            elif cs.name not in inputs:
+                raise ValueError(f"carry input {cs.name!r} not provided")
+            else:
+                carry[cs.name] = inputs[cs.name]
+        return carry
+
+    @property
+    def n_units(self) -> int:
+        return sum(seg.n for seg in self.segments)
+
+
+def _scan_body(seg: Segment, cast: Callable | None,
+               policy: ComputePolicy | None) -> Callable:
+    """(x, carry)-carrying ``lax.scan`` body for one segment, with the
+    policy-driven remat wrapper and the in-body param cast (see module
+    docstring for why the cast must live inside the body)."""
+    def body(xc, lp):
+        x, carry = xc
+        if cast is not None:
+            lp = cast(lp)
+        x, carry = seg.body(lp, x, carry)
+        return (x, carry), None
+    return resolve_policy(policy).checkpoint(body)
+
+
+def run_program(program: StageProgram, x: jax.Array, carry: dict,
+                policy: ComputePolicy | None = None) -> tuple[jax.Array, dict]:
+    """Non-pipelined executor: scan each segment in order."""
+    for seg in program.segments:
+        (x, carry), _ = jax.lax.scan(
+            _scan_body(seg, program.cast, policy), (x, carry), seg.params)
+    return x, carry
+
+
+def _check_groups_equal(chunks: list[list[Segment]]) -> None:
+    ref = chunks[0]
+    for c in chunks[1:]:
+        for a, b in zip(ref, c):
+            same = (a.name == b.name and a.n == b.n and a.tied == b.tied
+                    and jax.tree.structure(a.params) == jax.tree.structure(b.params))
+            if not same:
+                raise ValueError(
+                    "stage split requires structurally identical segment "
+                    "groups per stage; got "
+                    f"{[(s.name, s.n) for s in ref]} vs "
+                    f"{[(s.name, s.n) for s in c]} — choose pp*virtual_stages "
+                    "to divide the program's repeating pattern")
+            if a.tied and any(
+                    x is not y for x, y in zip(jax.tree.leaves(a.params),
+                                               jax.tree.leaves(b.params))):
+                # tied stages run chunk-0's params on every stage; distinct
+                # tensors here would silently diverge from run_program
+                raise ValueError(
+                    f"tied segment {a.name!r} references different param "
+                    "tensors across stages — tied segments must share one "
+                    "set of weights (or drop tied=True to stack per-stage "
+                    "copies)")
+
+
+def split_stages(program: StageProgram, n_stages: int,
+                 policy: ComputePolicy | None = None):
+    """Cut the program into ``n_stages`` identical stages for the pipeline.
+
+    Returns ``(stacked_stage_params, stage_fn)``:
+
+      * ``stacked_stage_params`` — pytree whose leaves lead with the
+        ``n_stages`` dim (logical stage order),
+      * ``stage_fn(stage_params_slice, payload) -> payload`` with
+        ``payload = {"x": activations, **carries}`` — the pytree payload
+        :func:`repro.core.pipeline.pipeline_spmd` moves through the ring.
+
+    Single-segment programs split on the unit axis; multi-segment programs
+    split on the segment list into structurally-equal groups.
+    """
+    segs = program.segments
+    if len(segs) == 1:
+        seg = segs[0]
+        if seg.n % n_stages != 0:
+            raise ValueError(
+                f"segment {seg.name!r} has {seg.n} scan units, not divisible "
+                f"by pp*virtual_stages={n_stages}")
+        per = seg.n // n_stages
+        sp = jax.tree.map(
+            lambda a: a.reshape(n_stages, per, *a.shape[1:]), seg.params)
+
+        def stage_fn(sp_slice, payload):
+            carry = {k: v for k, v in payload.items() if k != "x"}
+            (x, carry), _ = jax.lax.scan(
+                _scan_body(seg, program.cast, policy),
+                (payload["x"], carry), sp_slice)
+            return {"x": x, **carry}
+
+        return sp, stage_fn
+
+    if len(segs) % n_stages != 0:
+        raise ValueError(
+            f"program has {len(segs)} segments "
+            f"({[s.name for s in segs]}), not divisible by "
+            f"pp*virtual_stages={n_stages}")
+    k = len(segs) // n_stages
+    chunks = [list(segs[i * k:(i + 1) * k]) for i in range(n_stages)]
+    _check_groups_equal(chunks)
+    ref = chunks[0]
+    # tied segments (weight-tied across stages) are closed over, not
+    # stacked into the stage dim — the stage vmap broadcasts them
+    sp = tuple(
+        jax.tree.map(lambda *leaves: jnp.stack(leaves),
+                     *[c[j].params for c in chunks])
+        for j in range(k) if not ref[j].tied)
+    bodies = [_scan_body(ref[j], program.cast, policy) for j in range(k)]
+
+    def stage_fn(sp_slice, payload):
+        x = payload["x"]
+        carry = {key: v for key, v in payload.items() if key != "x"}
+        it = iter(sp_slice)
+        for j in range(k):
+            params_j = ref[j].params if ref[j].tied else next(it)
+            (x, carry), _ = jax.lax.scan(bodies[j], (x, carry), params_j)
+        return {"x": x, **carry}
+
+    return sp, stage_fn

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+
+from repro.kernels.tiling import fit_block
 from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_N = 256
@@ -75,8 +77,8 @@ def ce_logsumexp_pallas(h: jax.Array, w: jax.Array, labels: jax.Array, *,
     N, d = h.shape
     V = w.shape[1]
     valid_vocab = valid_vocab or V
-    block_n = _fit(block_n, N)
-    block_v = _fit(block_v, V)
+    block_n = fit_block(block_n, N)
+    block_v = fit_block(block_v, V)
     nn, nv = N // block_n, V // block_v
     return pl.pallas_call(
         functools.partial(_ce_kernel, block_v=block_v, nv=nv,
@@ -104,13 +106,6 @@ def ce_logsumexp_pallas(h: jax.Array, w: jax.Array, labels: jax.Array, *,
     )(h, w, labels)
 
 
-def _fit(block: int, n: int) -> int:
-    b = min(block, n)
-    while n % b != 0:
-        b -= 1
-    return b
-
-
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
 def cross_entropy_tokens(h, w, labels, valid_vocab=None, interpret=False):
     """Per-token CE losses (N,) fp32; differentiable w.r.t. h and w.
@@ -134,7 +129,7 @@ def _ce_tokens_bwd(valid_vocab, interpret, res, g):
     V = w.shape[1]
     vv = valid_vocab or V
     w32 = w.astype(jnp.float32)
-    chunk = _fit(DEFAULT_BLOCK_N, N)
+    chunk = fit_block(DEFAULT_BLOCK_N, N)
     nc = N // chunk
 
     def body(dw, xs):

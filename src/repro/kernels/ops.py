@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as fa
 from repro.kernels import rmsnorm as rn
+from repro.kernels.tiling import fit_block
 
 
 def _on_cpu() -> bool:
@@ -43,18 +44,11 @@ def flash_attention(
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    bq = _fit_block(block_q, Sq)
-    bk = _fit_block(block_k, Skv)
+    bq = fit_block(block_q, Sq)
+    bk = fit_block(block_k, Skv)
     out = fa.flash_attention(qt, kt, vt, causal, sliding_window, q_offset,
                              bq, bk, interpret)
     return out.transpose(0, 2, 1, 3)
-
-
-def _fit_block(block: int, s: int) -> int:
-    b = min(block, s)
-    while s % b != 0:
-        b -= 1
-    return b
 
 
 def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5,
@@ -62,6 +56,14 @@ def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5,
     if interpret is None:
         interpret = _on_cpu()
     return rn.rmsnorm(x, w, eps, rn.DEFAULT_BLOCK_ROWS, interpret)
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5,
+              interpret: bool | None = None) -> jax.Array:
+    from repro.kernels import layernorm as ln
+    if interpret is None:
+        interpret = _on_cpu()
+    return ln.layernorm(x, w, b, eps, ln.DEFAULT_BLOCK_ROWS, interpret)
 
 
 def cross_entropy(h: jax.Array, w: jax.Array, labels: jax.Array,
@@ -94,4 +96,15 @@ def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array,
         interpret = _on_cpu()
     shape = x.shape
     out = sg.swiglu(x.reshape(-1, shape[-1]), w1, w3, interpret=interpret)
+    return out.reshape(*shape[:-1], w1.shape[1])
+
+
+def gelu_mlp_in(x: jax.Array, w1: jax.Array,
+                interpret: bool | None = None) -> jax.Array:
+    """Fused gelu(x@w1) (tanh approximation); x: (..., d)."""
+    from repro.kernels import gelu_mlp as gm
+    if interpret is None:
+        interpret = _on_cpu()
+    shape = x.shape
+    out = gm.gelu_mlp_in(x.reshape(-1, shape[-1]), w1, interpret=interpret)
     return out.reshape(*shape[:-1], w1.shape[1])

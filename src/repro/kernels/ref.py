@@ -46,6 +46,22 @@ def rmsnorm_ref(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array
     return (x32 * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)).astype(x.dtype)
 
 
+def layernorm_ref(x: jax.Array, weight: jax.Array, bias: jax.Array,
+                  eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    normed = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (normed * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def gelu_mlp_in_ref(x: jax.Array, w1: jax.Array) -> jax.Array:
+    """Fused MLP input half: gelu(x @ w1), tanh approximation."""
+    a = (x.astype(jnp.float32) @ w1.astype(jnp.float32))
+    return jax.nn.gelu(a, approximate=True).astype(x.dtype)
+
+
 def swiglu_ref(x: jax.Array, w1: jax.Array, w3: jax.Array) -> jax.Array:
     """Fused gate: silu(x@w1) * (x@w3)."""
     a = x @ w1

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiling import fit_block
+
 DEFAULT_BLOCK_ROWS = 256
 
 
@@ -47,16 +49,9 @@ def rmsnorm(x, w, eps=1e-5, block_rows=DEFAULT_BLOCK_ROWS, interpret=False):
     """x: (..., d); w: (d,)."""
     shape = x.shape
     x2d = x.reshape(-1, shape[-1])
-    out = rmsnorm_fwd_pallas(x2d, w, eps=eps, block_rows=_fit(block_rows, x2d.shape[0]),
+    out = rmsnorm_fwd_pallas(x2d, w, eps=eps, block_rows=fit_block(block_rows, x2d.shape[0]),
                              interpret=interpret)
     return out.reshape(shape)
-
-
-def _fit(block_rows: int, n: int) -> int:
-    b = min(block_rows, n)
-    while n % b != 0:
-        b -= 1
-    return b
 
 
 def _fwd(x, w, eps, block_rows, interpret):

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiling import fit_block
+
 DEFAULT_BLOCK_N = 256
 DEFAULT_BLOCK_F = 512
 
@@ -35,7 +37,7 @@ def swiglu_fwd_pallas(x2d: jax.Array, w1: jax.Array, w3: jax.Array, *,
                       interpret: bool) -> jax.Array:
     N, d = x2d.shape
     F = w1.shape[1]
-    bn, bf = _fit(block_n, N), _fit(block_f, F)
+    bn, bf = fit_block(block_n, N), fit_block(block_f, F)
     return pl.pallas_call(
         _swiglu_kernel,
         grid=(N // bn, F // bf),
@@ -87,9 +89,3 @@ def swiglu(x2d: jax.Array, w1: jax.Array, w3: jax.Array, *,
     """x2d: (N, d); w1/w3: (d, F) -> (N, F).  Differentiable."""
     return _swiglu(x2d, w1, w3, block_n, block_f, interpret)
 
-
-def _fit(block: int, n: int) -> int:
-    b = min(block, n)
-    while n % b != 0:
-        b -= 1
-    return b

@@ -1,0 +1,10 @@
+"""Shared block-fitting helper for the Pallas kernels: the largest block
+size <= ``block`` that divides ``n`` (Pallas grids need exact tiling)."""
+from __future__ import annotations
+
+
+def fit_block(block: int, n: int) -> int:
+    b = min(block, n)
+    while n % b != 0:
+        b -= 1
+    return b

@@ -242,6 +242,17 @@ def main() -> None:
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true",
                     help="all archs x shapes (single-pod unless --both-meshes)")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline stages: any family pipelines via the "
+                         "StageProgram IR (pp>1 builds the 3D plan mesh)")
+    ap.add_argument("--virtual-stages", type=int, default=1,
+                    help="interleaved virtual stages per pipe rank (pp>1)")
+    ap.add_argument("--gas", type=int, default=1,
+                    help="microbatches (= pipeline in-flight count when pp>1)")
+    ap.add_argument("--dp", type=int, default=None,
+                    help="data-parallel ways of an explicit plan (default 16)")
+    ap.add_argument("--tp", type=int, default=None,
+                    help="tensor-parallel ways of an explicit plan (default 16)")
     ap.add_argument("--out", default=None, help="append JSON records here")
     ap.add_argument("--print-memory", action="store_true")
     args = ap.parse_args()
@@ -249,12 +260,24 @@ def main() -> None:
     archs = ASSIGNED if (args.all or args.arch in (None, "all")) else [args.arch]
     shapes = sorted(SHAPES) if args.shape == "all" else [args.shape]
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    explicit_plan = (args.pp > 1 or args.gas > 1 or args.virtual_stages > 1
+                     or args.dp is not None or args.tp is not None)
+
+    def plan_for(mp: bool):
+        if not explicit_plan:
+            return None  # default_plan(mp) inside dryrun_one
+        # mirror default_plan's pod-as-extra-DP axis so multi-pod records
+        # keep the batch sharded over the pod axis of the production mesh
+        return TrainPlan(dp=args.dp or 16, tp=args.tp or 16, pp=args.pp,
+                         virtual_stages=args.virtual_stages, gas=args.gas,
+                         precision="bf16", zero1=True,
+                         extra_dp_axes=("pod",) if (mp and args.pp == 1) else ())
 
     records = []
     for arch in archs:
         for shape in shapes:
             for mp in meshes:
-                rec = dryrun_one(arch, shape, multi_pod=mp)
+                rec = dryrun_one(arch, shape, multi_pod=mp, plan=plan_for(mp))
                 records.append(rec)
                 if args.out:
                     with open(args.out, "a") as f:

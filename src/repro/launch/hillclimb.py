@@ -100,10 +100,10 @@ VARIANTS = {
     "pp2_v2": _v(
         plan_fn=lambda p: dataclasses.replace(p, pp=2, dp=16, tp=16, gas=8,
                                               virtual_stages=2),
-        note="finer-grained pipe: 4 logical stages on 2 ranks (2x smaller "
-             "per-transfer activations, bubble 3/11 vs 1/9 — the comm-"
-             "granularity tradeoff; true interleaved-1F1B bubble shrinkage "
-             "is modeled analytically in core/bubble.py)"),
+        note="interleaved-1F1B virtual staging: 4 logical stages round-robin "
+             "on 2 ranks; the GSPMD path now realizes the shrinking bubble "
+             "(p-1)/(v*m+p-1) per wave (core/bubble.py:wave_bubble_fraction) "
+             "at the cost of 2x more, half-sized cross-stage transfers"),
     # ComputePolicy points: recompute policy x fused kernels (the compute-
     # path axis of the search space; see core/compute.py)
     "remat_selective": _v(
@@ -165,7 +165,11 @@ def main():
                   "remat_selective+gas4"],
         "qwen3_decode": ["baseline", "kv_int8"],
         "llama4_prefill": ["baseline", "seq_shard", "kv_int8"],
-        "seamless": ["baseline", "pad_vocab256", "embed_replicated"],
+        # pp variants now apply to every family (StageProgram IR): the
+        # encdec pair searches the pipelined points of Table IV too
+        # (arctic's 35 layers don't tile pp=2 — its plan stays 2D)
+        "seamless": ["baseline", "pad_vocab256", "embed_replicated",
+                     "pp2_gas8"],
         "arctic": ["baseline", "ep_model", "embed_replicated", "ep_model+embed_repl",
                    "pad_vocab256", "moe_dp_attn", "moe_dp_attn+seq", "seq_shard",
                    "fsdp_seq"],

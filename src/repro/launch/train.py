@@ -108,12 +108,8 @@ def main() -> None:
             print("warning: --kernels with attn_logit_softcap set: the flash "
                   "kernel has no softcap support, attention falls back to "
                   "the jnp path (norm/MLP/CE kernels still engage)")
-        if cfg.norm != "rmsnorm":
-            print(f"warning: --kernels with norm={cfg.norm!r}: only rmsnorm "
-                  "has a fused kernel, norms take the jnp path")
-        if cfg.act != "swiglu":
-            print(f"warning: --kernels with act={cfg.act!r}: only swiglu has "
-                  "a fused kernel, MLPs take the jnp path")
+        # norm and act are fully fused now: rmsnorm + layernorm kernels,
+        # swiglu + gelu gate kernels — no per-op fallback for either knob
         if cfg.family in ("moe",):
             print("warning: --kernels on an MoE family: expert einsums stay "
                   "jnp (norm/shared-MLP/attention/CE kernels still engage)")

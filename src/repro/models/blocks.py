@@ -173,3 +173,24 @@ def mlp_block(params: dict, x: jax.Array, cfg: ModelConfig,
     h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps,
                           use_kernel=pol.kernels)
     return x + layers.mlp(h, params, cfg.act, use_kernel=pol.kernels)
+
+
+def segment_body(cfg: ModelConfig, policy: ComputePolicy | None,
+                 q_chunk: int, *, causal: bool = True, cross: bool = False):
+    """StageProgram scan body over one stacked transformer block.
+
+    Covers the dense/vlm stack, the encoder stack (``causal=False``), the
+    hybrid family's shared attention+MLP block, and — with ``cross=True`` —
+    the encdec decoder block, whose cross-attention memory arrives via the
+    ``carry["memory"]`` channel (it rides the pipeline with the
+    activations; see ``core/stage_program.py``).
+    """
+    def body(lp: dict, x: jax.Array, carry: dict):
+        x = self_attn_block(lp["attn"], x, cfg, causal=causal,
+                            q_chunk=q_chunk, policy=policy)
+        if cross:
+            x = cross_attn_block(lp["cross"], x, carry["memory"], cfg,
+                                 policy=policy)
+        x = mlp_block(lp["mlp"], x, cfg, policy=policy)
+        return x, carry
+    return body

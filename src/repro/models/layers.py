@@ -49,9 +49,8 @@ def apply_norm(x: jax.Array, params: dict, kind: str, eps: float,
             return kernel_ops.rmsnorm(x, params["scale"], eps)
         return rms_norm(x, params["scale"], eps)
     if use_kernel:
-        warnings.warn("fused kernels requested but norm kind is "
-                      f"{kind!r}: only rmsnorm has a Pallas kernel, "
-                      "falling back to the jnp path", stacklevel=2)
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.layernorm(x, params["scale"], params["bias"], eps)
     return layer_norm(x, params["scale"], params["bias"], eps)
 
 
@@ -213,9 +212,9 @@ def mlp(x: jax.Array, params: dict, act: str, use_kernel: bool = False) -> jax.A
             return h @ params["w2"]
         return swiglu(x, params["w1"], params["w3"], params["w2"])
     if use_kernel:
-        warnings.warn(f"fused kernels requested but act is {act!r}: only "
-                      "swiglu has a Pallas kernel, falling back to the jnp "
-                      "path", stacklevel=2)
+        from repro.kernels import ops as kernel_ops
+        h = kernel_ops.gelu_mlp_in(x, params["w1"])
+        return h @ params["w2"]
     return gelu_mlp(x, params["w1"], params["w2"])
 
 

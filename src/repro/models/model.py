@@ -19,7 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import stage_program as sp
 from repro.core.compute import ComputePolicy, resolve as resolve_policy
+from repro.core.stage_program import unknown_family
 from repro.models import blocks, layers, moe, rwkv, ssm
 from repro.models.common import (
     ModelConfig, Spec, axes_tree, init_params, is_spec, param_count,
@@ -81,7 +83,7 @@ def _layer_specs(cfg: ModelConfig) -> dict:
             "cross": blocks.attn_specs(cfg, cross=True),
             "mlp": blocks.mlp_specs(cfg),
         }
-    raise ValueError(f"unknown family {fam}")
+    unknown_family(cfg)
 
 
 def _n_super(cfg: ModelConfig) -> int:
@@ -169,72 +171,75 @@ class Model:
         return params["lm_head"]
 
     # ------------------------------------------------------------------
-    # Stacks
+    # StageProgram lowering: the family-agnostic layer-stack IR
     # ------------------------------------------------------------------
-    def _run_stack(self, stacked: Any, x: jax.Array, *, causal: bool = True,
-                   memory: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    def stage_program(self, params: dict) -> sp.StageProgram:
+        """Lower this family's layer stack into the StageProgram IR
+        (``core/stage_program.py``): a tagged segment sequence plus the
+        carry contract, consumed by both the non-pipelined executor and
+        the pp>1 pipeline.  ``params`` is the *storage-dtype* tree — the
+        executor casts slices to compute dtype inside each scan body so
+        the scan transpose accumulates per-microbatch gradients in fp32.
+        """
         cfg = self.cfg
+        pol = self.compute
         fam = cfg.family
-        pol = self.compute
+        cast = lambda t: _cast_floating(t, self.compute_dtype)  # noqa: E731
+        layer_params = params["layers"]
+        aux = (sp.CarrySpec("aux", sp.ACCUM),)
+        if fam in ("dense", "vlm"):
+            segments = (sp.Segment(
+                "block", layer_params, _n_stack(cfg),
+                blocks.segment_body(cfg, pol, self.q_chunk)),)
+            carries = aux
+        elif fam == "moe":
+            segments = (sp.Segment(
+                "moe_unit", layer_params, _n_stack(cfg),
+                moe.segment_body(cfg, pol, self.q_chunk)),)
+            carries = aux
+        elif fam == "rwkv":
+            segments = (sp.Segment(
+                "rwkv", layer_params, cfg.n_layers,
+                rwkv.segment_body(cfg, pol)),)
+            carries = aux
+        elif fam == "hybrid":
+            # zamba2's alternating pattern, flattened into a tagged unit
+            # sequence: each "super" unit scans its per-unit mamba
+            # sub-stack then applies the weight-tied shared attn+mlp block
+            # (closed over, not stacked — see ssm.hybrid_segment_body).
+            # The (n_super, per, ...) grouping is a pure reshape of the
+            # layer stack, so the pipelined stage split stays a local
+            # reshape of the pipe-sharded leading dim.
+            n_super = _n_super(cfg)
+            per = cfg.n_layers // n_super
+            grouped = jax.tree.map(
+                lambda a: a.reshape(n_super, per, *a.shape[1:]), layer_params)
+            segments = (sp.Segment(
+                "super", grouped, n_super,
+                ssm.hybrid_segment_body(cfg, pol, self.q_chunk,
+                                        params["shared"], cast)),)
+            carries = aux
+        elif fam == "encdec":
+            segments = (sp.Segment(
+                "decoder", layer_params, cfg.n_layers,
+                blocks.segment_body(cfg, pol, self.q_chunk, cross=True)),)
+            carries = aux + (sp.CarrySpec("memory", sp.INPUT),)
+        else:
+            unknown_family(cfg)
+        return sp.StageProgram(segments, carries, cast=cast)
 
-        def body(carry, lp):
-            x, aux = carry
-            if fam in ("dense", "vlm") or (fam == "encdec" and memory is None):
-                x = blocks.self_attn_block(lp["attn"], x, cfg, causal=causal,
-                                           q_chunk=self.q_chunk, policy=pol)
-                x = blocks.mlp_block(lp["mlp"], x, cfg, policy=pol)
-            elif fam == "moe":
-                if cfg.moe_every > 1:
-                    def dense_body(c, dlp):
-                        c = blocks.self_attn_block(dlp["attn"], c, cfg,
-                                                   causal=causal,
-                                                   q_chunk=self.q_chunk,
-                                                   policy=pol)
-                        return blocks.mlp_block(dlp["mlp"], c, cfg,
-                                                policy=pol), None
-                    x, _ = jax.lax.scan(dense_body, x, lp["dense"])
-                x = blocks.self_attn_block(lp["attn"], x, cfg, causal=causal,
-                                           q_chunk=self.q_chunk, policy=pol)
-                x, a = moe.moe_block(lp["moe"], x, cfg, policy=pol)
-                aux = aux + a
-            elif fam == "encdec":
-                x = blocks.self_attn_block(lp["attn"], x, cfg, causal=True,
-                                           q_chunk=self.q_chunk, policy=pol)
-                x = blocks.cross_attn_block(lp["cross"], x, memory, cfg,
-                                            policy=pol)
-                x = blocks.mlp_block(lp["mlp"], x, cfg, policy=pol)
-            elif fam == "rwkv":
-                x = rwkv.rwkv_block(lp, x, cfg, policy=pol)
-            elif fam == "hybrid":
-                x = ssm.mamba_block(lp, x, cfg, policy=pol)
-            else:
-                raise ValueError(fam)
-            return (x, aux), None
-
-        (x, aux), _ = jax.lax.scan(pol.checkpoint(body),
-                                   (x, jnp.float32(0.0)), stacked)
-        return x, aux
-
-    def _run_hybrid(self, params: dict, x: jax.Array) -> jax.Array:
+    def encoder_program(self, params: dict) -> sp.StageProgram:
+        """The encdec encoder stack as its own carry-less StageProgram —
+        the first half of the two-program composition whose output becomes
+        the decoder program's ``memory`` carry."""
         cfg = self.cfg
-        pol = self.compute
-        n_super = _n_super(cfg)
-        per = cfg.n_layers // n_super
-        grouped = jax.tree.map(
-            lambda a: a.reshape(n_super, per, *a.shape[1:]), params["layers"])
-        shared = params["shared"]
-
-        def super_body(x, lp_group):
-            def inner(x2, lp):
-                return ssm.mamba_block(lp, x2, cfg, policy=pol), None
-            x, _ = jax.lax.scan(inner, x, lp_group)
-            x = blocks.self_attn_block(shared["attn"], x, cfg, causal=True,
-                                       q_chunk=self.q_chunk, policy=pol)
-            x = blocks.mlp_block(shared["mlp"], x, cfg, policy=pol)
-            return x, None
-
-        x, _ = jax.lax.scan(pol.checkpoint(super_body), x, grouped)
-        return x
+        return sp.StageProgram(
+            (sp.Segment("encoder", params["encoder"]["layers"],
+                        cfg.enc_layers,
+                        blocks.segment_body(cfg, self.compute, self.q_chunk,
+                                            causal=False)),),
+            carry_spec=(),
+            cast=lambda t: _cast_floating(t, self.compute_dtype))
 
     def encode(self, params: dict, frames: jax.Array) -> jax.Array:
         """Audio/encoder stack: frame embeddings (B, T, fd) -> memory (B, T, d)."""
@@ -242,16 +247,8 @@ class Model:
         pol = self.compute
         enc = params["encoder"]
         x = frames.astype(self.compute_dtype) @ enc["in_proj"].astype(self.compute_dtype)
-
-        def body(carry, lp):
-            x, _ = carry
-            x = blocks.self_attn_block(lp["attn"], x, cfg, causal=False,
-                                       q_chunk=self.q_chunk, policy=pol)
-            x = blocks.mlp_block(lp["mlp"], x, cfg, policy=pol)
-            return (x, jnp.float32(0.0)), None
-
-        (x, _), _ = jax.lax.scan(pol.checkpoint(body), (x, jnp.float32(0.0)),
-                                 enc["layers"])
+        prog = self.encoder_program(params)
+        x, _ = sp.run_program(prog, x, {}, policy=pol)
         return layers.apply_norm(x, enc["final_norm"], cfg.norm, cfg.rms_eps,
                                  use_kernel=pol.kernels)
 
@@ -264,17 +261,15 @@ class Model:
         cparams = _cast_floating(params, self.compute_dtype,
                                  skip=("state",))  # weights in compute dtype
         x = self._embed(cparams, batch)
-        aux = jnp.float32(0.0)
-        if cfg.family == "hybrid":
-            x = self._run_hybrid(cparams, x)
-        elif cfg.family == "encdec":
-            memory = self.encode(cparams, batch["frames"])
-            x, aux = self._run_stack(cparams["layers"], x, memory=memory)
-        else:
-            x, aux = self._run_stack(cparams["layers"], x)
+        inputs = {}
+        if cfg.family == "encdec":
+            inputs["memory"] = self.encode(params, batch["frames"])
+        prog = self.stage_program(params)
+        x, carry = sp.run_program(prog, x, prog.init_carry(inputs),
+                                  policy=self.compute)
         x = layers.apply_norm(x, cparams["final_norm"], cfg.norm, cfg.rms_eps,
                               use_kernel=self.compute.kernels)
-        return x, aux
+        return x, carry.get("aux", jnp.float32(0.0))
 
     def logits(self, params: dict, batch: dict) -> jax.Array:
         h, _ = self.hidden_states(params, batch)
@@ -309,26 +304,25 @@ class Model:
                        pipe_axis: str = "pipe",
                        data_axis: str = "data") -> tuple[jax.Array, dict]:
         """Same objective as :meth:`loss`, with the layer stack run as a
-        ``pp``-stage (optionally ``virtual_stages``-interleaved) pipeline.
+        ``pp``-stage (``virtual_stages``-interleaved when > 1) pipeline —
+        for *every* model family, via the StageProgram IR.
 
         The batch is split into ``n_micro`` microbatches that flow through
-        :func:`repro.core.pipeline.pipeline_spmd`; embed / final norm / CE
-        head run on every pipe rank (they are tiny and stay TP/DP-sharded by
-        GSPMD exactly as in the non-pipelined path).  Mathematically
-        identical to :meth:`loss` — the pipeline is pure scheduling.
+        :func:`repro.core.pipeline.pipeline_spmd`; the program's carries
+        (MoE aux accumulator, encdec cross-attention memory) ride the same
+        collective-permute channel as the activations.  Embed / final norm
+        / CE head (and the encdec encoder, the first program of the
+        two-program composition) run on every pipe rank — they stay
+        TP/DP-sharded by GSPMD exactly as in the non-pipelined path.
+        Mathematically this matches the pp==1 path at the same ``n_micro``
+        (per-microbatch MoE routing and aux means included) — the pipeline
+        is pure scheduling, and the in-body param cast keeps the
+        cross-microbatch gradient accumulation of the pipeline scan's
+        transpose in fp32 (see ``core/stage_program.py``).
         """
         from repro.core import pipeline as pipe
 
         cfg = self.cfg
-        if cfg.family not in ("dense", "vlm"):
-            raise NotImplementedError(
-                f"pipeline parallelism supports uniform layer stacks "
-                f"(dense/vlm), not family={cfg.family!r}")
-        n_stages = pp * virtual_stages
-        if cfg.n_layers % n_stages != 0:
-            raise ValueError(
-                f"n_layers={cfg.n_layers} not divisible by "
-                f"pp*virtual_stages={n_stages}")
         cparams = _cast_floating(params, self.compute_dtype)
         x = self._embed(cparams, batch)
         B = x.shape[0]
@@ -336,22 +330,35 @@ class Model:
             raise ValueError(f"batch {B} not divisible by n_micro={n_micro}")
 
         pol = self.compute
+        prog = self.stage_program(params)
+        stage_params, stage_fn = sp.split_stages(
+            prog, pp * virtual_stages, policy=pol)
 
-        def layer_fn(lp, h):
-            h = blocks.self_attn_block(lp["attn"], h, cfg, causal=True,
-                                       q_chunk=self.q_chunk, policy=pol)
-            return blocks.mlp_block(lp["mlp"], h, cfg, policy=pol)
+        inputs = {}
+        if cfg.family == "encdec":
+            inputs["memory"] = self.encode(params, batch["frames"])
+
+        mbs = B // n_micro
+
+        def split(a):
+            return a.reshape(n_micro, mbs, *a.shape[1:])
+
+        payload = {"x": split(x)}
+        for cs in prog.carry_spec:
+            payload[cs.name] = (jnp.zeros((n_micro,), jnp.float32)
+                                if cs.kind == sp.ACCUM
+                                else split(inputs[cs.name]))
 
         pipelined = pipe.pipeline_spmd(
-            pipe.layer_stage_fn(layer_fn, policy=pol), mesh,
-            n_stages=pp, v=virtual_stages,
+            stage_fn, mesh, n_stages=pp, v=virtual_stages,
             pipe_axis=pipe_axis, data_axis=data_axis)
-        micro = x.reshape(n_micro, B // n_micro, *x.shape[1:])
-        stages = pipe.stack_stages(cparams["layers"], n_stages)
-        h = pipelined(stages, micro).reshape(B, *x.shape[1:])
+        out = pipelined(stage_params, payload)
+        h = out["x"].reshape(B, *x.shape[1:])
+        # per-microbatch aux means match the pp==1 gas scan's average
+        aux = (jnp.mean(out["aux"]) if "aux" in out else jnp.float32(0.0))
         h = layers.apply_norm(h, cparams["final_norm"], cfg.norm, cfg.rms_eps,
                               use_kernel=pol.kernels)
-        return self._loss_from_hidden(params, h, batch, jnp.float32(0.0))
+        return self._loss_from_hidden(params, h, batch, aux)
 
     # ------------------------------------------------------------------
     # Caches
@@ -398,7 +405,7 @@ class Model:
                 ssm.mamba_cache_specs(cfg, batch, self.compute_dtype), cfg.n_layers)
             specs["shared"] = stack_specs(kv(), _n_super(cfg))
         else:
-            raise ValueError(cfg.family)
+            unknown_family(cfg)
         return specs
 
     def init_cache(self, batch: int, cache_len: int) -> dict:
@@ -499,7 +506,7 @@ class Model:
                 lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), mcs)
             cache["shared"] = kvs
         else:
-            raise ValueError(cfg.family)
+            unknown_family(cfg)
 
         x = layers.apply_norm(x, cparams["final_norm"], cfg.norm, cfg.rms_eps)
         W = self._unembed_matrix(cparams)
@@ -588,7 +595,7 @@ class Model:
                 lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), nmc)
             new_cache["shared"] = nkv
         else:
-            raise ValueError(cfg.family)
+            unknown_family(cfg)
 
         x = layers.apply_norm(x, cparams["final_norm"], cfg.norm, cfg.rms_eps)
         W = self._unembed_matrix(cparams)

@@ -153,3 +153,25 @@ def moe_block(params: dict, x: jax.Array, cfg: ModelConfig,
         out = out + layers.mlp(h, params["dense"], cfg.act,
                                use_kernel=pol.kernels)
     return x + out, aux.astype(jnp.float32)
+
+
+def segment_body(cfg: ModelConfig, policy: ComputePolicy | None,
+                 q_chunk: int):
+    """StageProgram scan body for one MoE stack unit: the interleaved
+    dense sub-stack (``moe_every > 1``), attention, and the MoE FFN whose
+    load-balance loss accumulates into the ``carry["aux"]`` channel."""
+    from repro.models import blocks
+
+    def body(lp: dict, x: jax.Array, carry: dict):
+        if cfg.moe_every > 1:
+            def dense_body(c, dlp):
+                c = blocks.self_attn_block(dlp["attn"], c, cfg, causal=True,
+                                           q_chunk=q_chunk, policy=policy)
+                return blocks.mlp_block(dlp["mlp"], c, cfg,
+                                        policy=policy), None
+            x, _ = jax.lax.scan(dense_body, x, lp["dense"])
+        x = blocks.self_attn_block(lp["attn"], x, cfg, causal=True,
+                                   q_chunk=q_chunk, policy=policy)
+        x, a = moe_block(lp["moe"], x, cfg, policy=policy)
+        return x, {**carry, "aux": carry["aux"] + a}
+    return body

@@ -197,6 +197,16 @@ def rwkv_block(params: dict, x: jax.Array, cfg: ModelConfig,
     return x
 
 
+def segment_body(cfg: ModelConfig, policy: ComputePolicy | None = None):
+    """StageProgram scan body over one stacked RWKV block.  The wkv
+    recurrent state is sequence-level and layer-local in training (each
+    layer re-initialises it at t=0 inside :func:`rwkv_block`), so nothing
+    crosses the segment-carry channel — see ``core/stage_program.py``."""
+    def body(lp: dict, x: jax.Array, carry: dict):
+        return rwkv_block(lp, x, cfg, policy=policy), carry
+    return body
+
+
 def rwkv_prefill(params: dict, x: jax.Array, cfg: ModelConfig,
                  policy: ComputePolicy | None = None):
     B, _, d = x.shape

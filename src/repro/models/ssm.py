@@ -153,6 +153,40 @@ def mamba_block(params: dict, x: jax.Array, cfg: ModelConfig,
     return x + y @ params["out_proj"]
 
 
+def segment_body(cfg: ModelConfig, policy: ComputePolicy | None = None):
+    """StageProgram scan body over one stacked Mamba2 block.  Like RWKV,
+    the SSD state is sequence-level and layer-local in training, so the
+    segment carry passes through untouched."""
+    def body(lp: dict, x: jax.Array, carry: dict):
+        return mamba_block(lp, x, cfg, policy=policy), carry
+    return body
+
+
+def hybrid_segment_body(cfg: ModelConfig, policy: ComputePolicy | None,
+                        q_chunk: int, shared_params: dict, cast):
+    """StageProgram scan body for one zamba2 "super" unit: the alternating
+    [mamba x per, shared attention+MLP] pattern flattened into a single
+    scan body.  ``shared_params`` is the weight-tied shared block
+    (storage dtype — ``cast`` applies the compute-dtype cast in-body, like
+    every other segment param): it is *closed over* rather than stacked
+    into the unit/stage dim, which keeps tying honest (one tensor,
+    per-unit cotangents summed by autodiff) and keeps the pipelined stage
+    split a pure reshape of the layer stack — re-stacking sliced or
+    broadcast params inside jit miscompiles under the XLA CPU SPMD
+    partitioner (see core/stage_program.py:Segment.tied)."""
+    from repro.models import blocks
+    mamba = segment_body(cfg, policy)
+    shared_body = blocks.segment_body(cfg, policy, q_chunk)
+
+    def body(lp: dict, x: jax.Array, carry: dict):
+        def inner(xc, l):
+            x2, c = xc
+            return mamba(l, x2, c), None
+        (x, carry), _ = jax.lax.scan(inner, (x, carry), lp)
+        return shared_body(cast(shared_params), x, carry)
+    return body
+
+
 def mamba_prefill(params: dict, x: jax.Array, cfg: ModelConfig,
                   policy: ComputePolicy | None = None):
     """Like mamba_block but also returns (conv_state, ssm_state) for decode."""

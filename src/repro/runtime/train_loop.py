@@ -15,12 +15,17 @@ One ``jit_train_step`` serves every plan on the 3D
 
   * ``pp == 1`` — the classic path: GAS microbatches scanned with fp32
     gradient accumulation, TP via sharding rules, ZeRO-1 over "data".
-  * ``pp > 1``  — the same step, but the layer stack runs through the GSPMD
-    pipeline (``core/pipeline.py:pipeline_spmd``): the ``gas`` microbatches
-    become the pipeline's in-flight microbatches (the paper's knob that
-    saturates stages — bubble ``(pp-1)/(gas+pp-1)``, ``core/bubble.py``),
-    accumulated inside one backward pass.  ZeRO-1, loss scaling, and the
-    optimizer update are byte-identical between both paths.
+  * ``pp > 1``  — the same step, but the layer stack (lowered to the
+    family-agnostic StageProgram IR — *every* model family pipelines) runs
+    through the GSPMD pipeline (``core/pipeline.py:pipeline_spmd``): the
+    ``gas`` microbatches become the pipeline's in-flight microbatches (the
+    paper's knob that saturates stages — bubble ``(pp-1)/(gas+pp-1)``, or
+    the interleaved ``(pp-1)/(v*gas+pp-1)`` when ``virtual_stages > 1``;
+    ``core/bubble.py``), accumulated inside one backward pass whose
+    pipeline-scan transpose sums per-microbatch parameter cotangents in
+    fp32 (the in-body param cast, ``core/stage_program.py``) — matching
+    the pp==1 outer scan's fp32 accumulation.  ZeRO-1, loss scaling, and
+    the optimizer update are byte-identical between both paths.
 
 ``TrainPlan`` remains as a thin alias for existing callers; a 2D plan is
 just ``ParallelPlan(pp=1)``.
@@ -167,8 +172,9 @@ def build_train_step(model: Model, opt_cfg: AdamWConfig, plan: ParallelPlan,
 
     pp > 1: the ``gas`` microbatches instead flow through the GSPMD pipeline
     inside a single value_and_grad (grads over the summed-loss graph are the
-    same mean over microbatches, accumulated by the pipeline's backward), so
-    GAS doubles as the pipeline-saturation knob exactly as in the paper.
+    same mean over microbatches, accumulated in fp32 by the pipeline scan's
+    transpose — see ``core/stage_program.py``), so GAS doubles as the
+    pipeline-saturation knob exactly as in the paper.
     """
     policy = prec.policy_from_name(plan.precision)
     compute = plan.compute_policy()

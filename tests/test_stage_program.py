@@ -1,0 +1,258 @@
+"""StageProgram IR: every model family pipelines under pp>1.
+
+Covers the acceptance bar of the StageProgram PR:
+  * pp=2 trajectory equivalence vs the pp=1 fp32 baseline (same gas) for
+    the four newly-pipelinable families: moe, rwkv, hybrid, encdec (+vlm);
+  * the GSPMD interleaved-1F1B schedule: measured idle fraction from the
+    executor's own tick counts matches the analytic bubble model and
+    *shrinks* with virtual_stages (the contiguous fine-grained split grew);
+  * IR unit behaviour: run_program == the segments applied in order,
+    split_stages divisibility errors, tied-segment closure, and the
+    exhaustive-family error helper.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bubble
+from repro.core import pipeline as pipe
+from repro.core import stage_program as sp
+
+
+FAMILY_EQUIV_TEMPLATE = '''
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.optim import AdamWConfig
+from repro.runtime.train_loop import ParallelPlan, init_train_state, jit_train_step
+from repro.launch.mesh import mesh_for_plan, single_device_mesh
+from repro.data import SyntheticCorpus, make_batch_iterator
+
+CASES = %s
+
+for fam, (arch, kw) in CASES.items():
+    cfg = get_config(arch).reduced(d_model=64, n_heads=4, n_kv_heads=2,
+                                   d_ff=128, vocab_size=256, head_dim=16,
+                                   ssm_head_dim=16, **kw)
+    model = Model(cfg, jnp.float32)
+    opt = AdamWConfig(lr=1e-3)
+    extra = {}
+    if cfg.family == "encdec":
+        extra["frames"] = ((cfg.enc_seq_len, cfg.frontend_dim), np.dtype("float32"))
+    if cfg.family == "vlm":
+        extra["patches"] = ((cfg.num_patches, cfg.frontend_dim), np.dtype("float32"))
+    it = make_batch_iterator(SyntheticCorpus(vocab_size=cfg.vocab_size),
+                             seq_len=32, global_batch=8, prefetch=0,
+                             extra_specs=extra or None)
+    batches = [next(it) for _ in range(3)]
+
+    def run(plan, mesh):
+        state = init_train_state(model, jax.random.PRNGKey(0), opt, plan)
+        step = jit_train_step(model, opt, plan, mesh, 8, 32)
+        out = []
+        for b in batches:
+            state, m = step(state, b)
+            out.append(float(m["loss"]))
+        return out
+
+    # same gas on both sides: per-microbatch MoE routing/aux must match
+    ref = run(ParallelPlan(gas=2, precision="fp32", zero1=False,
+                           rules="dp_only"), single_device_mesh())
+    plan = ParallelPlan(dp=2, tp=1, pp=2, gas=2, precision="fp32")
+    pp = run(plan, mesh_for_plan(plan))
+    np.testing.assert_allclose(pp, ref, rtol=1e-5, atol=1e-4, err_msg=fam)
+    print(fam, "OK")
+print("FAMILY_EQUIV_OK")
+'''
+
+
+def test_pipelined_moe_rwkv_match_pp1_fp32_trajectory(multidev):
+    cases = ('{"moe": ("llama4-maverick-400b-a17b", dict(n_layers=4)), '
+             '"rwkv": ("rwkv6-1.6b", dict(n_layers=4))}')
+    out = multidev(FAMILY_EQUIV_TEMPLATE % cases, n_devices=4)
+    assert "FAMILY_EQUIV_OK" in out
+
+
+def test_pipelined_hybrid_encdec_vlm_match_pp1_fp32_trajectory(multidev):
+    cases = ('{"hybrid": ("zamba2-2.7b", dict(n_layers=4, hybrid_attn_every=2)), '
+             '"encdec": ("seamless-m4t-medium", dict(n_layers=4, enc_layers=2, enc_seq_len=16)), '
+             '"vlm": ("internvl2-2b", dict(n_layers=4, num_patches=4))}')
+    out = multidev(FAMILY_EQUIV_TEMPLATE % cases, n_devices=4)
+    assert "FAMILY_EQUIV_OK" in out
+
+
+INTERLEAVED_V2_CODE = '''
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.optim import AdamWConfig
+from repro.runtime.train_loop import ParallelPlan, init_train_state, jit_train_step
+from repro.launch.mesh import mesh_for_plan, single_device_mesh
+from repro.data import SyntheticCorpus, make_batch_iterator
+
+# moe exercises the aux carry through the round-robin interleaved ring
+cfg = get_config("llama4-maverick-400b-a17b").reduced(
+    n_layers=8, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=256, head_dim=16)
+model = Model(cfg, jnp.float32)
+opt = AdamWConfig(lr=1e-3)
+it = make_batch_iterator(SyntheticCorpus(vocab_size=cfg.vocab_size),
+                         seq_len=32, global_batch=8, prefetch=0)
+batches = [next(it) for _ in range(2)]
+
+def run(plan, mesh):
+    state = init_train_state(model, jax.random.PRNGKey(0), opt, plan)
+    step = jit_train_step(model, opt, plan, mesh, 8, 32)
+    out = []
+    for b in batches:
+        state, m = step(state, b)
+        out.append(float(m["loss"]))
+    return out
+
+ref = run(ParallelPlan(gas=2, precision="fp32", zero1=False, rules="dp_only"),
+          single_device_mesh())
+vplan = ParallelPlan(dp=2, tp=1, pp=2, virtual_stages=2, gas=2, precision="fp32")
+vv = run(vplan, mesh_for_plan(vplan))
+np.testing.assert_allclose(vv, ref, rtol=1e-5, atol=1e-4)
+print("INTERLEAVED_V2_OK")
+'''
+
+
+def test_interleaved_v2_moe_matches_pp1(multidev):
+    out = multidev(INTERLEAVED_V2_CODE, n_devices=4)
+    assert "INTERLEAVED_V2_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Interleaved schedule vs the analytic bubble model
+# ---------------------------------------------------------------------------
+
+def test_spmd_interleaved_idle_matches_analytic_and_shrinks_with_v():
+    p, m = 2, 2
+    measured_v1 = pipe.spmd_idle_fraction(p, m, v=1)
+    measured_v2 = pipe.spmd_idle_fraction(p, m, v=2)
+    # v=1 is the GPipe schedule exactly
+    assert measured_v1 == pytest.approx(
+        bubble.bubble_fraction(p, m, schedule="gpipe"))
+    # v=2 realizes the interleaved-1F1B bubble (m == p: full wave)
+    assert measured_v2 == pytest.approx(
+        bubble.bubble_fraction(p, m, 2, schedule="1f1b_interleaved"))
+    assert measured_v2 == pytest.approx(bubble.wave_bubble_fraction(p, m, 2))
+    # shrinking with v — not growing with S as the old contiguous split did
+    assert measured_v2 < measured_v1
+    S = p * 2
+    contiguous_v2 = (S - 1) / (m + S - 1)
+    assert measured_v2 < contiguous_v2
+    # deeper interleaving keeps shrinking
+    assert pipe.spmd_idle_fraction(p, m, v=4) < measured_v2
+    # and the schedule ticks match the scan sizes the executor builds
+    ticks, per_tick, useful = pipe.spmd_schedule(p, m, v=2)
+    assert (ticks, per_tick, useful) == (S + p - 1, p, m * S)
+
+
+def test_wave_bubble_matches_interleaved_model_on_full_waves():
+    for p, v in [(2, 2), (4, 2), (4, 4)]:
+        assert bubble.wave_bubble_fraction(p, p, v) == pytest.approx(
+            bubble.bubble_fraction(p, p, v, schedule="1f1b_interleaved"))
+
+
+# ---------------------------------------------------------------------------
+# IR unit behaviour
+# ---------------------------------------------------------------------------
+
+def _toy_program(tied=False):
+    w_a = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8)) * 0.1
+    w_b = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8)) * 0.1
+
+    def body(lp, x, carry):
+        return x + jnp.tanh(x @ lp), {**carry, "aux": carry["aux"] + 1.0}
+
+    segs = (sp.Segment("a", w_a, 2, body),
+            sp.Segment("b", w_b, 1, body, tied=tied),
+            sp.Segment("a", w_a, 2, body),
+            sp.Segment("b", w_b, 1, body, tied=tied))
+    return sp.StageProgram(segs, (sp.CarrySpec("aux", sp.ACCUM),), cast=None)
+
+
+def test_run_program_applies_segments_in_order():
+    prog = _toy_program()
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 8))
+    out, carry = sp.run_program(prog, x, prog.init_carry({}))
+    ref = x
+    for seg in prog.segments:
+        for i in range(seg.n):
+            lp = jax.tree.map(lambda a, i=i: a[i], seg.params)
+            ref = ref + jnp.tanh(ref @ lp)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+    assert float(carry["aux"]) == prog.n_units  # one increment per unit
+
+
+def test_split_stages_matches_run_program_and_respects_tied():
+    for tied in (False, True):
+        prog = _toy_program(tied=tied)
+        x = jax.random.normal(jax.random.PRNGKey(3), (3, 8))
+        ref, ref_carry = sp.run_program(prog, x, prog.init_carry({}))
+        stage_params, stage_fn = sp.split_stages(prog, 2)
+        if tied:  # tied params are closed over, not stacked per stage
+            assert all(a.shape[0] == 2 for a in jax.tree.leaves(stage_params))
+            assert len(stage_params) == 1  # only the non-tied position
+        payload = {"x": x, "aux": jnp.float32(0.0)}
+        for s in range(2):
+            sl = jax.tree.map(lambda a: a[s], stage_params)
+            payload = stage_fn(sl, payload)
+        np.testing.assert_allclose(np.asarray(payload["x"]), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+        assert float(payload["aux"]) == float(ref_carry["aux"])
+
+
+def test_split_stages_divisibility_errors():
+    prog = _toy_program()
+    with pytest.raises(ValueError, match="not divisible"):
+        sp.split_stages(prog, 3)
+    single = sp.StageProgram(prog.segments[:1], (sp.CarrySpec("aux", sp.ACCUM),))
+    with pytest.raises(ValueError, match="not divisible"):
+        sp.split_stages(single, 3)
+
+
+def test_model_stage_programs_declare_family_carries():
+    from repro.configs import get_config
+    from repro.models.model import Model
+
+    m = Model(get_config("llama4-maverick-400b-a17b").reduced(), jnp.float32)
+    prog = m.stage_program(m.init(jax.random.PRNGKey(0)))
+    assert [c.name for c in prog.carry_spec] == ["aux"]
+
+    m = Model(get_config("seamless-m4t-medium").reduced(), jnp.float32)
+    prog = m.stage_program(m.init(jax.random.PRNGKey(0)))
+    assert {c.name for c in prog.carry_spec} == {"aux", "memory"}
+    kinds = {c.name: c.kind for c in prog.carry_spec}
+    assert kinds["memory"] == sp.INPUT and kinds["aux"] == sp.ACCUM
+    with pytest.raises(ValueError, match="memory"):
+        prog.init_carry({})  # input carries must be provided
+
+    m = Model(get_config("zamba2-2.7b").reduced(n_layers=4,
+                                                hybrid_attn_every=2),
+              jnp.float32)
+    prog = m.stage_program(m.init(jax.random.PRNGKey(0)))
+    # one tagged "super" unit per [mamba x per, shared] repetition
+    assert [s.name for s in prog.segments] == ["super"]
+    assert prog.segments[0].n == 2
+
+
+def test_unknown_family_error_names_supported_set():
+    import dataclasses
+    from repro.configs import get_config
+
+    cfg = dataclasses.replace(get_config("yi-6b"), family="quantum")
+    with pytest.raises(ValueError) as e:
+        sp.unknown_family(cfg)
+    msg = str(e.value)
+    assert "quantum" in msg
+    for fam in sp.FAMILIES:
+        assert fam in msg
+
+    from repro.models.model import Model
+    with pytest.raises(ValueError, match="supported families"):
+        Model(cfg, jnp.float32).cache_specs(1, 8)
