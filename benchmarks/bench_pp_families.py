@@ -104,11 +104,11 @@ def run_bench(args) -> dict:
         batches = [next(it) for _ in range(args.steps + 1)]
 
         plans = [
-            (ParallelPlan(gas=2, precision="fp32", zero1=False,
+            (ParallelPlan(gas=2, precision="fp32", zero=0,
                           rules="dp_only"), single_device_mesh()),
         ]
         pp2 = ParallelPlan(dp=n_dev // 2, tp=1, pp=2, gas=2,
-                           precision="fp32", zero1=False)
+                           precision="fp32", zero=0)
         plans.append((pp2, mesh_for_plan(pp2)))
         import dataclasses
         v2 = dataclasses.replace(pp2, virtual_stages=2)

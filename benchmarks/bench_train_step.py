@@ -1,5 +1,6 @@
 """bench_train_step: wall-time of ``jit_train_step`` across the ComputePolicy
-search space — (remat x kernels x plan) points on a smoke-sized config.
+and MemoryPlan search space — (remat x kernels x zero x plan) points on a
+smoke-sized config.
 
 This starts the repo's measured perf trajectory (as opposed to the analytic
 dry-run numbers): every point runs real steps on this machine's backend and
@@ -13,9 +14,14 @@ Schema (validated by ``--validate``, wired into ``make bench``):
 
   {"config": {arch, d_model, n_layers, seq_len, global_batch, steps, devices,
               backend, precision, kernels_interpret_mode},
-   "points": [{"plan": {dp, tp, pp, gas}, "remat": str, "kernels": bool,
+   "points": [{"plan": {dp, tp, pp, gas, zero}, "remat": str, "kernels": bool,
                "compile_s": float, "wall_s_per_step": float,
                "tokens_per_s": float, "losses": [float, ...]}, ...]}
+
+The ``zero`` plan key is the ZeRO stage (core/memplan.py); with more than
+one device the base dp plan is swept over stages 0..3 at remat=full, and the
+validator asserts every stage reproduces the same loss trajectory — the
+MemoryPlan correctness bar (same algorithm, different byte placement).
 
 ``backend``/``devices`` record ``jax.default_backend()`` and the device
 count of the run; ``kernels_interpret_mode`` flags the CPU caveat
@@ -39,7 +45,7 @@ import sys
 
 POINT_KEYS = {"plan", "remat", "kernels", "compile_s", "wall_s_per_step",
               "tokens_per_s", "losses"}
-PLAN_KEYS = {"dp", "tp", "pp", "gas"}
+PLAN_KEYS = {"dp", "tp", "pp", "gas", "zero"}
 LOSS_TOL = 1e-4
 
 
@@ -95,8 +101,30 @@ def validate(path: str) -> None:
                 f"({full_w:.4f}s) on the base plan={dict(plan)}")
             checked = True
     assert checked, "no (full, selective) pair on a kernels=False base plan"
+
+    # MemoryPlan invariant: the ZeRO stage never changes the training math —
+    # points differing only in plan["zero"] must share a loss trajectory
+    by_zero: dict = {}
+    for p in rec["points"]:
+        k = (tuple(sorted((a, b) for a, b in p["plan"].items() if a != "zero")),
+             p["remat"], bool(p["kernels"]))
+        by_zero.setdefault(k, []).append(p)
+    zero_groups = 0
+    for k, pts in by_zero.items():
+        if len({p["plan"]["zero"] for p in pts}) < 2:
+            continue
+        zero_groups += 1
+        ref = pts[0]["losses"]
+        for p in pts[1:]:
+            drift = max(abs(a - b) for a, b in zip(p["losses"], ref))
+            assert drift <= LOSS_TOL, (
+                f"zero={p['plan']['zero']} loss trajectory drifts "
+                f"{drift:.2e} from zero={pts[0]['plan']['zero']} ({k})")
+    if rec["config"]["devices"] > 1:
+        assert zero_groups >= 1, "no multi-stage zero group to validate"
     print(f"{path}: schema + invariants OK "
-          f"({len(rec['points'])} points)")
+          f"({len(rec['points'])} points, {zero_groups} zero-equivalence "
+          f"groups)")
 
 
 def run_bench(args) -> dict:
@@ -126,11 +154,12 @@ def run_bench(args) -> dict:
     batches = [next(it) for _ in range(args.steps + 1)]
 
     def base_plan(**kw):
-        return ParallelPlan(precision=args.precision, zero1=n_dev > 1, **kw)
+        kw.setdefault("zero", 1 if n_dev > 1 else 0)
+        return ParallelPlan(precision=args.precision, **kw)
 
     # the plan axis: dp fills the devices; a gas=2 point and a pp=2 point
     # ride along when the batch/devices/layers tile them, so the matrix
-    # covers (remat x kernels x plan)
+    # covers (remat x kernels x zero x plan)
     plans = [base_plan(dp=n_dev)]
     if args.global_batch % 2 == 0:
         plans.append(base_plan(dp=n_dev, gas=2))
@@ -141,9 +170,17 @@ def run_bench(args) -> dict:
         import dataclasses
         for remat in ("full", "selective", "none"):
             yield dataclasses.replace(plan, remat=remat, kernels=False)
-        if plan is plans[0] and not args.no_kernels:
-            for remat in ("full", "selective"):
-                yield dataclasses.replace(plan, remat=remat, kernels=True)
+        if plan is plans[0]:
+            # the MemoryPlan axis: sweep the ZeRO stage ladder on the base
+            # dp plan (remat=full) — the validator asserts all stages share
+            # one loss trajectory
+            if n_dev > 1:
+                for z in (0, 1, 2, 3):
+                    if z != plan.zero:
+                        yield dataclasses.replace(plan, zero=z)
+            if not args.no_kernels:
+                for remat in ("full", "selective"):
+                    yield dataclasses.replace(plan, remat=remat, kernels=True)
 
     def bench_point(plan):
         mesh = mesh_for_plan(plan)
@@ -165,7 +202,7 @@ def run_bench(args) -> dict:
         wall = float(np.min(walls))  # min-of-N: least-interference estimate
         return {
             "plan": {"dp": plan.dp, "tp": plan.tp, "pp": plan.pp,
-                     "gas": plan.gas},
+                     "gas": plan.gas, "zero": plan.zero},
             "remat": plan.remat,
             "kernels": plan.kernels,
             "compile_s": round(compile_s, 3),
@@ -179,7 +216,7 @@ def run_bench(args) -> dict:
         for p in points_for(plan):
             rec = bench_point(p)
             points.append(rec)
-            print(f"plan(dp={p.dp},tp={p.tp},pp={p.pp},gas={p.gas}) "
+            print(f"plan(dp={p.dp},tp={p.tp},pp={p.pp},gas={p.gas},zero={p.zero}) "
                   f"remat={p.remat:9s} kernels={int(p.kernels)} | "
                   f"{rec['wall_s_per_step']*1e3:8.2f} ms/step "
                   f"{rec['tokens_per_s']:>10,.0f} tok/s "

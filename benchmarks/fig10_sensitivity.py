@@ -1,18 +1,23 @@
-"""Fig. 10: SHAP sensitivity of throughput to the hyperparameters."""
+"""Fig. 10: SHAP sensitivity of throughput to the hyperparameters.
+
+Runs on the paper-faithful SPACE_175B_PAPER sub-axis (binary ZeRO bit):
+the paper's "memory axis least important" finding is about toggling
+optimizer-state sharding, not the stage-2/3 comm terms the full
+zero∈{0..3} ladder introduces (which dominate the ranking)."""
 from benchmarks._util import emit
-from repro.core.hpo import SPACE_175B, bayesian_search
+from repro.core.hpo import SPACE_175B_PAPER, bayesian_search
 from repro.core.sensitivity import shapley_importance
 from benchmarks.fig9_hpo_search import objective
 
 
 def run() -> None:
-    res = bayesian_search(objective, n_trials=128, seed=0)
-    imp = shapley_importance(res, SPACE_175B)
+    res = bayesian_search(objective, SPACE_175B_PAPER, n_trials=128, seed=0)
+    imp = shapley_importance(res, SPACE_175B_PAPER)
     ranked = sorted(imp.items(), key=lambda kv: -kv[1])
     for name, val in ranked:
         emit(f"fig10.shap.{name}", None, f"{val:.3f}")
     bottom_two = {ranked[-1][0], ranked[-2][0]}
-    emit("fig10.zero1_in_bottom_two", None,
-         f"{'zero1' in bottom_two}_paper_has_zero1_last_nnodes_second_last")
+    emit("fig10.zero_in_bottom_two", None,
+         f"{'zero' in bottom_two}_paper_has_zero1_last_nnodes_second_last")
     emit("fig10.ranking", None, ">".join(k for k, _ in ranked) +
          "_paper_mbs>tp>pp>nnodes>zero1")

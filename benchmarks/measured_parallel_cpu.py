@@ -27,11 +27,11 @@ it = make_batch_iterator(SyntheticCorpus(vocab_size=cfg.vocab_size),
                          seq_len=128, global_batch=16, prefetch=0)
 batch = next(it)
 for label, (dp, tp), plan in [
-    ("dp8", (8, 1), TrainPlan(rules="dp_only", zero1=False)),
-    ("dp8_zero1", (8, 1), TrainPlan(zero1=True)),
-    ("tp8", (1, 8), TrainPlan(rules="tp_only", zero1=False)),
-    ("dp2_tp4", (2, 4), TrainPlan(zero1=True)),
-    ("fsdp8", (8, 1), TrainPlan(rules="fsdp", zero1=True)),
+    ("dp8", (8, 1), TrainPlan(rules="dp_only", zero=0)),
+    ("dp8_zero1", (8, 1), TrainPlan(zero=1)),
+    ("tp8", (1, 8), TrainPlan(rules="tp_only", zero=0)),
+    ("dp2_tp4", (2, 4), TrainPlan(zero=1)),
+    ("fsdp8", (8, 1), TrainPlan(rules="fsdp", zero=1)),
 ]:
     mesh = make_mesh_2d(dp, tp)
     state = init_train_state(model, jax.random.PRNGKey(0), opt, plan)

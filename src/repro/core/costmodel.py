@@ -1,7 +1,7 @@
 """Analytic performance/memory model of 3D-parallel GPT training.
 
 This is the reproduction vehicle for the paper's empirical studies: the same
-(TP, PP, MBS, GAS, ZeRO-1, #nodes) knobs, evaluated against a machine model
+(TP, PP, MBS, GAS, ZeRO stage, #nodes) knobs, evaluated against a machine model
 of Frontier (MI250X GCDs, Infinity-Fabric/Slingshot topology tiers) or TPU
 v5e.  The model reproduces, structurally, Observations III.1–III.4, the
 Table V recipe throughputs, and the Fig. 12/13 scaling curves — and is the
@@ -25,6 +25,8 @@ import math
 from typing import Any
 
 import numpy as np
+
+from repro.core import memplan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,9 +117,19 @@ class ParallelCfg:
     mbs: int = 1
     gas: int = 1                 # = number of microbatches m
     dp: int = 1
-    zero1: bool = True
+    zero: int | None = None      # ZeRO stage 0|1|2|3 (core/memplan.py);
+                                 # None -> derive from the zero1 alias
+    zero1: bool = True           # deprecated alias (True -> 1, False -> 0)
     flash_attention: bool = True
     checkpoint_activations: bool = True
+
+    @property
+    def zero_stage(self) -> int:
+        if self.zero is not None:
+            if self.zero not in memplan.STAGES:
+                raise ValueError(f"zero must be in {memplan.STAGES}")
+            return self.zero
+        return 1 if self.zero1 else 0
 
     @property
     def n_gpus(self) -> int:
@@ -137,6 +149,9 @@ class Prediction:
     oom: bool
     bubble: float
     breakdown: dict[str, float]
+    # per-class state bytes (params/grads/opt/act) — Table II's structure,
+    # divided per the ZeRO stage (core/memplan.py:zero_divisors)
+    mem_breakdown: dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def objective(self) -> float:
@@ -190,15 +205,33 @@ def predict(model: GPTSize, cfg: ParallelCfg, machine: Machine = FRONTIER) -> Pr
         t_pp = 0.0
 
     # ---------------- DP gradient reduction ----------------
+    z = cfg.zero_stage
     if r > 1:
         grad_vol = 2.0 * N / (p * t)                   # fp16 gradients
         nodes = max(1, cfg.n_gpus // machine.gpus_per_node)
         contention = 1.0 + machine.dp_contention_alpha * math.log2(max(nodes, 1))
         # the NIC is shared by all GPUs of a node during the DP all-reduce
         dp_bw = machine.internode_bw / machine.gpus_per_node
-        t_dp = 2.0 * (r - 1) / r * grad_vol / dp_bw * contention
-        if cfg.zero1:
-            t_dp *= 1.05  # reduce-scatter + param all-gather ~ same volume
+        if z >= 2:
+            # each of the m microbatches reduce-scatters its full gradient
+            # (m x half an all-reduce — the known GAS cost of gradient
+            # sharding); stage 2 additionally all-gathers params after the
+            # update (they are replicated below stage 3), stage 3 does not
+            # — its gathers happen on use and are billed below.  The same
+            # 1.05 protocol overhead as stage 1 keeps m=1 monotonic.
+            halves = m + (1.0 if z == 2 else 0.0)
+            t_dp = halves * (r - 1) / r * grad_vol / dp_bw * contention * 1.05
+        else:
+            t_dp = 2.0 * (r - 1) / r * grad_vol / dp_bw * contention
+            if z >= 1:
+                t_dp *= 1.05  # reduce-scatter + param all-gather ~ same volume
+        if z >= 3:
+            # ZeRO-3: weights all-gathered on use, *per microbatch* (the
+            # 1/dp resident-param budget means each microbatch's forward,
+            # backward, and checkpointing-replay forward re-gather)
+            gathers = (3.0 if cfg.checkpoint_activations else 2.0) * m
+            param_vol = 2.0 * N / (p * t)
+            t_dp += gathers * (r - 1) / r * param_vol / dp_bw * contention
     else:
         t_dp = 0.0
 
@@ -211,17 +244,24 @@ def predict(model: GPTSize, cfg: ParallelCfg, machine: Machine = FRONTIER) -> Pr
     bubble = (p - 1) / ticks if p > 1 else 0.0
 
     # ---------------- memory ----------------
+    # Table II's per-class byte budget: weights (bf16 + fp32 master) /
+    # fp32 grad accumulator / Adam moments, each divided by dp when the
+    # ZeRO stage shards that class (params at 3, grads at >= 2, opt >= 1)
     per_shard = N / (p * t)
-    mem = 10.0 * per_shard                              # 6 params + 4 grads
-    mem += 4.0 * per_shard / (r if cfg.zero1 else 1)    # optimizer states
+    p_div, g_div, o_div = memplan.zero_divisors(z, r)
+    mem_params = 6.0 * per_shard / p_div
+    mem_grads = 4.0 * per_shard / g_div
+    mem_opt = 4.0 * per_shard / o_div
+    mem = mem_params + mem_grads + mem_opt
     inflight = min(m, p) if p > 1 else 1
     act_bytes_layer = mbs * s * d * 2.0
     c_act = 2.5 if cfg.checkpoint_activations else 12.0
-    mem += inflight * act_bytes_layer * layers_per_stage * c_act / t
+    mem_act = inflight * act_bytes_layer * layers_per_stage * c_act / t
     if not cfg.flash_attention:
-        mem += mbs * (model.n_heads / t) * s * s * 2.0 * 2  # live score blocks
+        mem_act += mbs * (model.n_heads / t) * s * s * 2.0 * 2  # live score blocks
     # logits workspace on the last stage
-    mem += mbs * s * model.vocab * 4.0 / t
+    mem_act += mbs * s * model.vocab * 4.0 / t
+    mem += mem_act
     oom = mem > 0.92 * machine.hbm_bytes
 
     model_flops_step = 6.0 * N * cfg.gbs * s
@@ -237,6 +277,10 @@ def predict(model: GPTSize, cfg: ParallelCfg, machine: Machine = FRONTIER) -> Pr
             "t_comp": ticks * t_comp, "t_attn_mem": ticks * t_attn_mem,
             "t_tp": ticks * t_tp, "t_pp": ticks * t_pp,
             "t_dp": t_dp, "t_opt": t_opt,
+        },
+        mem_breakdown={
+            "params": mem_params, "grads": mem_grads, "opt": mem_opt,
+            "act": mem_act, "zero": float(z),
         },
     )
 

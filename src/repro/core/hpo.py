@@ -2,7 +2,10 @@
 
 Reproduces the paper's tuning of a 175B model over
   PP in {1,2,4,8,12,16}, TP in {1,2,4,8}, MBS in [4,20], GAS in {5,10},
-  ZeRO-1 in {0,1}, NNODES in {12,16}
+  ZeRO stage in {0..3} (the paper searched the binary ZeRO-1 bit; the
+  MemoryPlan axis widens it to the full stage ladder — arXiv 2501.04266
+  shows stage choice dominates throughput on this hardware),
+  NNODES in {12,16}
 maximizing achieved FLOPS, with OOM failures penalized via the paper's
 "F-objective" (failed configs get a value below every success, so the
 surrogate learns to avoid them — the red-arrow frequency in Fig. 9 decays).
@@ -30,9 +33,16 @@ SPACE_175B = (
     Param("tp", (1, 2, 4, 8)),
     Param("mbs", tuple(range(4, 21))),
     Param("gas", (5, 10)),
-    Param("zero1", (0, 1)),
+    Param("zero", (0, 1, 2, 3)),   # ZeRO stage (was the binary "zero1" bit)
     Param("nnodes", (12, 16)),
 )
+
+# paper-faithful restriction: §IV searched only the binary ZeRO-1 bit, and
+# Fig. 10's "memory axis matters least" ranking holds on that sub-axis —
+# stages 2/3 add comm terms that dominate the sensitivity, so the Fig. 9/10
+# reproduction scripts search this space to stay comparable to the paper
+SPACE_175B_PAPER = tuple(
+    Param("zero", (0, 1)) if p.name == "zero" else p for p in SPACE_175B)
 
 # the compute-path axes (Duan et al. 2407.20018's third dimension of the
 # search space): recompute policy x fused kernels, searched jointly with
@@ -55,14 +65,15 @@ def trial_plan(config: dict, *, gpus_per_node: int = 8,
                rules: str = "megatron_tp", precision: str = "bf16"):
     """Concretize one search-space config into a real 3D ``ParallelPlan``.
 
-    The search enumerates (pp, tp, gas, zero1, nnodes) plus the compute-path
+    The search enumerates (pp, tp, gas, zero, nnodes) plus the compute-path
     knobs (remat, kernels); dp is whatever tiles the remaining devices
     (``nnodes * gpus_per_node / (tp * pp)``) — exactly the paper's
-    decomposition.  Returns ``None`` when the config cannot tile the device
-    count (the F-objective failure case: callers penalize it below every
-    success so the surrogate learns to avoid it).  ``mbs`` stays a
-    cost-model knob: the executor derives the microbatch size from
-    global_batch / gas.
+    decomposition.  A legacy ``zero1`` key is honoured as the deprecated
+    alias for stage 0/1 when ``zero`` is absent.  Returns ``None`` when the
+    config cannot tile the device count (the F-objective failure case:
+    callers penalize it below every success so the surrogate learns to
+    avoid it).  ``mbs`` stays a cost-model knob: the executor derives the
+    microbatch size from global_batch / gas.
     """
     from repro.runtime.train_loop import ParallelPlan  # lazy: hpo stays numpy-only
 
@@ -70,10 +81,16 @@ def trial_plan(config: dict, *, gpus_per_node: int = 8,
     tp, pp = int(config.get("tp", 1)), int(config.get("pp", 1))
     if tp < 1 or pp < 1 or world % (tp * pp) != 0:
         return None
+    if "zero" in config:
+        zero = int(config["zero"])
+    elif "zero1" in config:
+        zero = 1 if config["zero1"] else 0
+    else:
+        zero = 1
     return ParallelPlan(
         dp=world // (tp * pp), tp=tp, pp=pp,
         virtual_stages=int(config.get("vs", 1)),
-        gas=int(config.get("gas", 1)), zero1=bool(config.get("zero1", True)),
+        gas=int(config.get("gas", 1)), zero=zero,
         rules=rules, precision=precision,
         remat=str(config.get("remat", "full")),
         kernels=bool(config.get("kernels", 0)))

@@ -1,0 +1,178 @@
+"""MemoryPlan: the ZeRO stage (0|1|2|3) as a first-class plan axis.
+
+Sharded data parallelism is one of the paper's three pillars: Table II's
+bytes-per-parameter budget (params + gradients + optimizer states, divided
+across the DP group as the stage rises) is what makes 175B/1T fit per GCD at
+all.  "Low-Bandwidth Partitioning" (arXiv 2501.04266) and the
+distributed-training survey (arXiv 2407.20018) both treat the stage choice as
+a primary search axis — so the executor carries it on the ``ParallelPlan``
+(``zero=``; the old ``zero1=`` bool remains as a deprecated alias) and every
+downstream layer (cost model, dry-run, HPO, hillclimber, benchmarks) reads it
+from here.
+
+Stage semantics, expressed purely as GSPMD shardings (no manual
+gather/scatter inside jit — re-stacking sliced params or hand-rolled
+all-gathers trip the XLA CPU SPMD partitioner miscompile documented in
+``core/stage_program.py:Segment.tied``):
+
+  * **0** — plain DP: params, grads, and optimizer states all replicated
+    across the data axis; grads all-reduced at the end of the step.
+  * **1** — optimizer-state sharding: Adam's mu/nu carry the data axis on
+    their first divisible, unsharded dim (:func:`~repro.core.sharding.
+    zero_partition_spec` — the GSPMD-native equivalent of DeepSpeed's flat
+    1-D shard: same 1/dp footprint, same reduce-scatter + all-gather
+    pattern around the update).
+  * **2** — gradient sharding: the fp32 accumulation buffer (``gsum`` in
+    ``runtime/train_loop.py:build_train_step``) additionally carries the
+    same data-axis spec as a sharding *constraint on the scan carry*, so
+    GSPMD reduce-scatters each microbatch's gradients into the shard that
+    owns the optimizer state instead of all-reducing full gradients and
+    slicing at the update.
+  * **3** — parameter sharding: every parameter leaf carries the data axis
+    on its first divisible, unsharded dim (the generalization of the old
+    ``fsdp`` preset, which sharded only ``embed``), composed on top of
+    whatever the TP/PP rules already assigned; GSPMD all-gathers weights
+    on use and reduce-scatters their gradients.
+
+All four stages are the *same algorithm* — identical fp32 loss trajectories
+on any mesh (tests/test_memplan.py) — differing only in where bytes live
+and which collectives move them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any
+
+import numpy as np
+
+# NOTE: jax / repro.core.sharding are imported lazily inside the sharding
+# methods so the byte-accounting half of this module stays numpy-only —
+# core/costmodel.py and core/hpo.py import it without pulling in jax.
+
+STAGES = (0, 1, 2, 3)
+
+
+def resolve_stage(zero: int | None, zero1: bool | None) -> int:
+    """Resolve the (``zero``, deprecated ``zero1``) pair to a stage.
+
+    ``zero`` wins whenever it is set (so ``dataclasses.replace(plan,
+    zero=...)`` always takes effect on an already-resolved plan); ``zero1``
+    is only consulted when ``zero`` is None, with a DeprecationWarning.
+    Defaults to stage 1 — the paper's baseline — when neither is given.
+    """
+    if zero is None:
+        if zero1 is not None:
+            warnings.warn(
+                "zero1= is deprecated; pass zero=0|1|2|3 (zero1=True -> "
+                "zero=1, zero1=False -> zero=0)",
+                DeprecationWarning, stacklevel=3)
+            return 1 if zero1 else 0
+        return 1
+    if zero not in STAGES:
+        raise ValueError(f"zero must be one of {STAGES}, got {zero!r}")
+    # NOTE: when zero is set, a disagreeing zero1 is ignored *silently* —
+    # dataclasses.replace passes every stored field back through here, so a
+    # replace(plan, zero=N) against the stale normalized alias (in either
+    # direction, e.g. upgrading a zero=0 plan) is indistinguishable from an
+    # explicit zero1= mismatch; warning would fire on the sanctioned
+    # zero-wins path.  Override the stage via zero=, never zero1=.
+    return int(zero)
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryPlan:
+    """One point on the memory axis: which training state is sharded over
+    the data-parallel mesh axis, and how."""
+
+    zero: int = 1                # ZeRO stage
+    data_axis: str = "data"      # the DP mesh axis the shards live on
+
+    def __post_init__(self):
+        if self.zero not in STAGES:
+            raise ValueError(f"zero must be one of {STAGES}, got {self.zero!r}")
+
+    # -- what the stage shards ------------------------------------------
+    @property
+    def shards_optimizer(self) -> bool:
+        return self.zero >= 1
+
+    @property
+    def shards_grads(self) -> bool:
+        return self.zero >= 2
+
+    @property
+    def shards_params(self) -> bool:
+        return self.zero >= 3
+
+    # -- sharding trees (pure GSPMD specs, no manual collectives) -------
+    def param_shardings(self, shape_tree: Any, base_shardings: Any) -> Any:
+        """Stage 3: add the data axis to the first divisible, unsharded dim
+        of every parameter leaf (first-fit — ``zero_partition_spec``); the
+        TP/PP axes of ``base_shardings`` are preserved."""
+        if not self.shards_params:
+            return base_shardings
+        from repro.core import sharding as shd
+        return shd.tree_zero_shardings(shape_tree, base_shardings, self.data_axis)
+
+    def grad_shardings(self, shape_tree: Any, param_shardings: Any) -> Any:
+        """Stage >= 2: gradients live where the optimizer shard lives, so
+        the per-microbatch accumulation reduce-scatters instead of
+        all-reducing (a no-op tree at stage 3, where params already carry
+        the data axis)."""
+        if not self.shards_grads:
+            return param_shardings
+        from repro.core import sharding as shd
+        return shd.tree_zero_shardings(shape_tree, param_shardings, self.data_axis)
+
+    def optimizer_shardings(self, shape_tree: Any, param_shardings: Any) -> Any:
+        """Stage >= 1: Adam mu/nu on the data axis (ZeRO-1 and up)."""
+        if not self.shards_optimizer:
+            return param_shardings
+        from repro.core import sharding as shd
+        return shd.tree_zero_shardings(shape_tree, param_shardings, self.data_axis)
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting
+# ---------------------------------------------------------------------------
+
+def zero_divisors(zero: int, dp: int) -> tuple[int, int, int]:
+    """(param_div, grad_div, opt_div): what each state class divides by under
+    this stage — the paper's Table II column structure."""
+    if zero not in STAGES:
+        raise ValueError(f"zero must be one of {STAGES}, got {zero!r}")
+    dp = max(int(dp), 1)
+    return (dp if zero >= 3 else 1,
+            dp if zero >= 2 else 1,
+            dp if zero >= 1 else 1)
+
+
+def table2_bytes_per_param(zero: int, dp: int, *, param_bytes: float = 2.0,
+                           grad_bytes: float = 4.0,
+                           opt_bytes: float = 12.0) -> dict[str, float]:
+    """Table II's mixed-precision byte budget per parameter per device.
+
+    Defaults: bf16 weights (2), fp32 gradient accumulator (4), fp32 master
+    copy + Adam moments (12).  Stage k divides the classes
+    ``zero_divisors`` says it shards.
+    """
+    pd, gd, od = zero_divisors(zero, dp)
+    out = {"params": param_bytes / pd, "grads": grad_bytes / gd,
+           "opt": opt_bytes / od}
+    out["total"] = out["params"] + out["grads"] + out["opt"]
+    return out
+
+
+def sharded_bytes(shape_dtype_tree: Any, shardings: Any) -> int:
+    """Exact per-device bytes of a state tree under a sharding tree (the
+    measured counterpart to :func:`table2_bytes_per_param`): sums
+    ``prod(shard_shape) * itemsize`` over leaves."""
+    import jax
+
+    leaves = zip(jax.tree.leaves(shape_dtype_tree), jax.tree.leaves(shardings))
+    total = 0
+    for sds, sh in leaves:
+        shard = sh.shard_shape(tuple(sds.shape))
+        total += int(np.prod(shard, dtype=np.int64)) * np.dtype(sds.dtype).itemsize
+    return total

@@ -12,7 +12,11 @@ dim, so on TPU the K-loop for one Q block runs sequentially and the online
 softmax state (m, l, acc) lives in VMEM scratch across those steps.
 
 Causal + sliding-window masking is applied in-kernel; fully-masked K blocks
-are skipped with ``pl.when`` (no MXU work issued).
+are skipped with ``pl.when`` (no MXU work issued).  Logit softcapping
+(gemma-style ``tanh(s/c)*c``, applied after scaling and before masking) is
+native: the backward kernels recompute ``t = tanh(s/c)`` from Q/K and fold
+the ``1 - t^2`` Jacobian into ``ds``, so softcap models no longer fall back
+to the jnp path.
 
 GQA is native: K/V carry their ``Hkv`` heads unreplicated and the BlockSpec
 index maps route query head ``h`` to KV head ``h // G`` — no ``jnp.repeat``
@@ -44,6 +48,7 @@ NEG_INF = -1e30
 def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
                 acc_ref, m_ref, l_ref, *,
                 scale: float, causal: bool, window: int | None,
+                softcap: float | None,
                 block_q: int, block_k: int, nk: int, q_offset: int):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
@@ -76,6 +81,8 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
         mask = None
         if causal:
             mask = k_pos <= q_pos
@@ -108,7 +115,7 @@ def _group_size(q, k) -> int:
 
 
 def flash_attention_fwd(q, k, v, *, causal, window, q_offset,
-                        block_q, block_k, interpret):
+                        block_q, block_k, interpret, softcap=None):
     B, H, Sq, hd = q.shape
     Skv = k.shape[2]
     g = _group_size(q, k)
@@ -120,6 +127,7 @@ def flash_attention_fwd(q, k, v, *, causal, window, q_offset,
 
     kernel = functools.partial(
         _fwd_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap,
         block_q=block_q, block_k=block_k, nk=nk, q_offset=q_offset)
 
     out, lse = pl.pallas_call(
@@ -156,8 +164,8 @@ def flash_attention_fwd(q, k, v, *, causal, window, q_offset,
 # ---------------------------------------------------------------------------
 
 def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
-                   acc_ref, *, scale, causal, window, block_q, block_k, nk,
-                   q_offset):
+                   acc_ref, *, scale, causal, window, softcap, block_q,
+                   block_k, nk, q_offset):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -185,6 +193,10 @@ def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
         delta = delta_ref[0, 0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
+        tcap = None
+        if softcap is not None:
+            tcap = jnp.tanh(s / softcap)
+            s = tcap * softcap
         mask = None
         if causal:
             mask = k_pos <= q_pos
@@ -197,6 +209,8 @@ def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         ds = p * (dp - delta[:, None])
+        if tcap is not None:
+            ds = ds * (1.0 - tcap * tcap)   # d tanh(s/c)*c / ds
         acc_ref[...] += jax.lax.dot_general(
             ds, k, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32) * scale
@@ -208,7 +222,8 @@ def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
 
 def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
                     dk_ref, dv_ref, dk_acc, dv_acc, *,
-                    scale, causal, window, block_q, block_k, nq, ng, q_offset):
+                    scale, causal, window, softcap, block_q, block_k, nq, ng,
+                    q_offset):
     # grid (B, Hkv, nk, G, nq): the G query heads sharing this KV head are the
     # second-minor grid dim, so dk/dv accumulate over the whole group in VMEM
     # scratch and the gradients come out unreplicated at Hkv heads.
@@ -241,6 +256,10 @@ def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
         delta = delta_ref[0, 0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
+        tcap = None
+        if softcap is not None:
+            tcap = jnp.tanh(s / softcap)
+            s = tcap * softcap
         mask = None
         if causal:
             mask = k_pos <= q_pos
@@ -255,6 +274,8 @@ def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         ds = p * (dp - delta[:, None])
+        if tcap is not None:
+            ds = ds * (1.0 - tcap * tcap)   # d tanh(s/c)*c / ds
         dk_acc[...] += jax.lax.dot_general(
             ds, q, (((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32) * scale
@@ -266,7 +287,7 @@ def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 
 
 def flash_attention_bwd(q, k, v, out, lse, do, *, causal, window, q_offset,
-                        block_q, block_k, interpret):
+                        block_q, block_k, interpret, softcap=None):
     B, H, Sq, hd = q.shape
     Hkv, Skv = k.shape[1], k.shape[2]
     g = _group_size(q, k)
@@ -278,8 +299,8 @@ def flash_attention_bwd(q, k, v, out, lse, do, *, causal, window, q_offset,
 
     dq = pl.pallas_call(
         functools.partial(_bwd_dq_kernel, scale=scale, causal=causal,
-                          window=window, block_q=block_q, block_k=block_k,
-                          nk=nk, q_offset=q_offset),
+                          window=window, softcap=softcap, block_q=block_q,
+                          block_k=block_k, nk=nk, q_offset=q_offset),
         grid=(B, H, nq, nk),
         in_specs=[
             pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
@@ -302,8 +323,8 @@ def flash_attention_bwd(q, k, v, out, lse, do, *, causal, window, q_offset,
     # dims, so the VMEM accumulators carry the whole group reduction
     dk, dv = pl.pallas_call(
         functools.partial(_bwd_dkv_kernel, scale=scale, causal=causal,
-                          window=window, block_q=block_q, block_k=block_k,
-                          nq=nq, ng=g, q_offset=q_offset),
+                          window=window, softcap=softcap, block_q=block_q,
+                          block_k=block_k, nq=nq, ng=g, q_offset=q_offset),
         grid=(B, Hkv, nk, g, nq),
         in_specs=[
             pl.BlockSpec((1, 1, block_q, hd),
@@ -342,31 +363,37 @@ def flash_attention_bwd(q, k, v, out, lse, do, *, causal, window, q_offset,
 # custom_vjp wrapper
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
 def flash_attention(q, k, v, causal=True, window=None, q_offset=0,
                     block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
-                    interpret=False):
+                    interpret=False, softcap=None):
     """q: (B, Hq, Sq, hd); k/v: (B, Hkv, Skv, hd) with Hq % Hkv == 0 — GQA
-    KV heads stay unreplicated (shared blocks via the grid index maps)."""
+    KV heads stay unreplicated (shared blocks via the grid index maps).
+    ``softcap`` applies gemma-style logit capping ``tanh(s/c)*c`` in-kernel
+    (trailing arg so existing positional call sites stay valid)."""
     out, _ = flash_attention_fwd(q, k, v, causal=causal, window=window,
                                  q_offset=q_offset, block_q=block_q,
-                                 block_k=block_k, interpret=interpret)
+                                 block_k=block_k, interpret=interpret,
+                                 softcap=softcap)
     return out
 
 
-def _fa_fwd(q, k, v, causal, window, q_offset, block_q, block_k, interpret):
+def _fa_fwd(q, k, v, causal, window, q_offset, block_q, block_k, interpret,
+            softcap):
     out, lse = flash_attention_fwd(q, k, v, causal=causal, window=window,
                                    q_offset=q_offset, block_q=block_q,
-                                   block_k=block_k, interpret=interpret)
+                                   block_k=block_k, interpret=interpret,
+                                   softcap=softcap)
     return out, (q, k, v, out, lse)
 
 
-def _fa_bwd(causal, window, q_offset, block_q, block_k, interpret, res, do):
+def _fa_bwd(causal, window, q_offset, block_q, block_k, interpret, softcap,
+            res, do):
     q, k, v, out, lse = res
     dq, dk, dv = flash_attention_bwd(
         q, k, v, out, lse, do, causal=causal, window=window,
         q_offset=q_offset, block_q=block_q, block_k=block_k,
-        interpret=interpret)
+        interpret=interpret, softcap=softcap)
     return dq, dk, dv
 
 

@@ -30,12 +30,14 @@ def flash_attention(
     *,
     causal: bool = True,
     sliding_window: int | None = None,
+    softcap: float | None = None,
     q_offset: int = 0,
     block_q: int = fa.DEFAULT_BLOCK_Q,
     block_k: int = fa.DEFAULT_BLOCK_K,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """FlashAttention over the model's (B, S, H, hd) layout."""
+    """FlashAttention over the model's (B, S, H, hd) layout; ``softcap``
+    applies the gemma-style logit cap in-kernel."""
     if interpret is None:
         interpret = _on_cpu()
     B, Sq, Hq, hd = q.shape
@@ -47,7 +49,7 @@ def flash_attention(
     bq = fit_block(block_q, Sq)
     bk = fit_block(block_k, Skv)
     out = fa.flash_attention(qt, kt, vt, causal, sliding_window, q_offset,
-                             bq, bk, interpret)
+                             bq, bk, interpret, softcap)
     return out.transpose(0, 2, 1, 3)
 
 

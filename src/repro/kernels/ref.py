@@ -13,6 +13,7 @@ def flash_attention_ref(
     *,
     causal: bool = True,
     sliding_window: int | None = None,
+    softcap: float | None = None,
     q_offset: int = 0,
 ) -> jax.Array:
     B, Hq, Sq, hd = q.shape
@@ -24,6 +25,8 @@ def flash_attention_ref(
     scale = 1.0 / np.sqrt(hd)
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
     qpos = jnp.arange(Sq) + q_offset
     kpos = jnp.arange(Skv)
     mask = None

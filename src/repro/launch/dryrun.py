@@ -36,7 +36,7 @@ from repro.runtime.serve_loop import (
     build_decode_step, cache_sds_and_shardings, decode_batch_specs)
 from repro.runtime.train_loop import (
     TrainPlan, batch_shardings, batch_specs, jit_train_step,
-    train_state_shardings)
+    train_state_bytes, train_state_shardings)
 
 
 def train_state_sds(model: Model) -> dict:
@@ -54,10 +54,10 @@ def train_state_sds(model: Model) -> dict:
     }
 
 
-def default_plan(multi_pod: bool, *, zero1: bool = True, gas: int = 1,
+def default_plan(multi_pod: bool, *, zero: int | None = None, gas: int = 1,
                  rules: str = "megatron_tp") -> TrainPlan:
     return TrainPlan(
-        rules=rules, zero1=zero1, gas=gas, precision="bf16",
+        rules=rules, zero=zero, gas=gas, precision="bf16",
         extra_dp_axes=("pod",) if multi_pod else (),
     )
 
@@ -90,7 +90,9 @@ def lower_step(arch: str, shape_name: str, *, multi_pod: bool,
                   compute=plan.compute_policy())
     meta = {"arch": arch, "shape": shape_name, "chips": chips,
             "mesh": mesh_name,
-            "kind": shape.kind, "plan": plan.rules + ("+zero1" if plan.zero1 else ""),
+            "kind": shape.kind,
+            "plan": plan.rules + (f"+zero{plan.zero}" if plan.zero else ""),
+            "zero": plan.zero,
             "gas": plan.gas, "remat": plan.remat, "kernels": plan.kernels}
 
     if shape.kind == "train":
@@ -104,6 +106,12 @@ def lower_step(arch: str, shape_name: str, *, multi_pod: bool,
             cfg, shape.global_batch, shape.seq_len, plan.compute_policy(),
             dp=mesh_dp, tp=mesh.shape.get("model", 1) or 1,
             pp=mesh.shape.get("pipe", 1) or 1, gas=plan.gas)
+        # the MemoryPlan byte report: exact per-device bytes of each train-
+        # state class under this plan's ZeRO stage, from the sharding specs
+        # themselves — optimizer bytes shrink ~1/dp at stage >= 1, gradient
+        # bytes at >= 2, parameter bytes at 3; sits next to XLA's measured
+        # peak in the record
+        meta["state_bytes"] = train_state_bytes(model, mesh, plan)
         step = jit_train_step(model, AdamWConfig(), plan, mesh,
                               shape.global_batch, shape.seq_len)
         bsds, _ = batch_specs(cfg, shape.global_batch, shape.seq_len)
@@ -219,12 +227,16 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
             peak_s = f" | peak {peak/1e9:.2f}GB" if peak else ""
             est_s = (f" (remat={meta['remat']} est. saved-act "
                      f"{act_est/1e9:.2f}GB)" if act_est else "")
+            sb = rec.get("state_bytes")
+            sb_s = (f" | zero{sb['zero']}: param {sb['param_bytes']/1e9:.2f}GB "
+                    f"grad {sb['grad_bytes']/1e9:.2f}GB "
+                    f"opt {sb['opt_bytes']/1e9:.2f}GB" if sb else "")
             print(f"[ok] {arch} x {shape_name} ({mesh_name}): "
                   f"lower {t_lower:.1f}s compile {t_compile:.1f}s | "
                   f"compute {terms.compute_s*1e3:.2f}ms mem {terms.memory_s*1e3:.2f}ms "
                   f"coll {terms.collective_s*1e3:.2f}ms -> {dom}-bound | "
                   f"useful-flops ratio {rec['useful_flops_ratio'] and round(rec['useful_flops_ratio'],3)}"
-                  f"{peak_s}{est_s}")
+                  f"{peak_s}{est_s}{sb_s}")
     except Exception as e:
         rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                "status": "error", "error": f"{type(e).__name__}: {e}",
@@ -249,6 +261,9 @@ def main() -> None:
                     help="interleaved virtual stages per pipe rank (pp>1)")
     ap.add_argument("--gas", type=int, default=1,
                     help="microbatches (= pipeline in-flight count when pp>1)")
+    ap.add_argument("--zero", type=int, choices=(0, 1, 2, 3), default=None,
+                    help="ZeRO stage of the MemoryPlan (default 1); the "
+                         "record's state_bytes shows the per-class shrink")
     ap.add_argument("--dp", type=int, default=None,
                     help="data-parallel ways of an explicit plan (default 16)")
     ap.add_argument("--tp", type=int, default=None,
@@ -261,7 +276,8 @@ def main() -> None:
     shapes = sorted(SHAPES) if args.shape == "all" else [args.shape]
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
     explicit_plan = (args.pp > 1 or args.gas > 1 or args.virtual_stages > 1
-                     or args.dp is not None or args.tp is not None)
+                     or args.dp is not None or args.tp is not None
+                     or args.zero is not None)
 
     def plan_for(mp: bool):
         if not explicit_plan:
@@ -270,7 +286,7 @@ def main() -> None:
         # keep the batch sharded over the pod axis of the production mesh
         return TrainPlan(dp=args.dp or 16, tp=args.tp or 16, pp=args.pp,
                          virtual_stages=args.virtual_stages, gas=args.gas,
-                         precision="bf16", zero1=True,
+                         precision="bf16", zero=args.zero,
                          extra_dp_axes=("pod",) if (mp and args.pp == 1) else ())
 
     records = []

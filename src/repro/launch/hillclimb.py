@@ -62,8 +62,20 @@ VARIANTS = {
             p, rule_overrides=(("seq", "model"),)),
         note="sequence-parallel residual stream (Megatron-SP flavoured)"),
     "no_zero1": _v(
-        plan_fn=lambda p: dataclasses.replace(p, zero1=False),
+        plan_fn=lambda p: dataclasses.replace(p, zero=0),
         note="replicated optimizer states (paper's ZeRO-1 ablation)"),
+    # MemoryPlan points: the ZeRO stage ladder (core/memplan.py) — each
+    # step trades a collective pattern for 1/dp of a state class
+    "zero2": _v(
+        plan_fn=lambda p: dataclasses.replace(p, zero=2),
+        note="ZeRO-2: fp32 grad accumulator sharded over data — the "
+             "accumulation scan carry reduce-scatters per microbatch "
+             "instead of all-reducing full grads"),
+    "zero3": _v(
+        plan_fn=lambda p: dataclasses.replace(p, zero=3),
+        note="ZeRO-3: every param leaf sharded over data on its first "
+             "divisible free dim (generalizes the old embed-only fsdp "
+             "preset); GSPMD all-gathers weights on use"),
     "moe_dp_attn": _v(
         plan_fn=lambda p: dataclasses.replace(
             p, rule_overrides=(("heads", None), ("kv_heads", None),
@@ -160,6 +172,7 @@ def main():
     args = ap.parse_args()
     plan_matrix = {
         "qwen3": ["baseline", "pad_vocab256", "seq_shard", "gas4", "fsdp", "no_zero1",
+                  "zero2", "zero3",
                   "moe_dp_attn+seq", "fsdp_seq", "pp2_gas8", "pp4_gas8",
                   "pp2_v2", "remat_selective", "remat_none",
                   "remat_selective+gas4"],

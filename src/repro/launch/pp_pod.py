@@ -32,7 +32,8 @@ from repro.optim import AdamWConfig
 from repro.runtime.train_loop import ParallelPlan, batch_specs, jit_train_step
 
 
-def pp_pod_plan(*, gas: int, tp: int = 16, precision: str = "fp32") -> ParallelPlan:
+def pp_pod_plan(*, gas: int, tp: int = 16, precision: str = "fp32",
+                zero: int | None = None) -> ParallelPlan:
     """2 pods as 2 pipeline stages; TP/DP fill the 16x16 grid inside each.
 
     fp32 default on this host: XLA *CPU*'s AllReducePromotion pass
@@ -40,7 +41,7 @@ def pp_pod_plan(*, gas: int, tp: int = 16, precision: str = "fp32") -> ParallelP
     limitation; roofline byte terms are therefore 2x-pessimistic vs bf16.
     """
     return ParallelPlan(pp=2, dp=256 // tp, tp=tp, gas=gas,
-                        precision=precision, zero1=True)
+                        precision=precision, zero=zero)
 
 
 def main():
@@ -49,12 +50,15 @@ def main():
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--gas", type=int, default=8)
     ap.add_argument("--tp", type=int, default=16)
+    ap.add_argument("--zero", type=int, choices=(0, 1, 2, 3), default=None,
+                    help="ZeRO stage across the intra-pod data axis "
+                         "(cross-pod traffic stays pipeline ppermute)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     # any family: the StageProgram IR pipelines every layer-stack flavour
-    plan = pp_pod_plan(gas=args.gas, tp=args.tp)
+    plan = pp_pod_plan(gas=args.gas, tp=args.tp, zero=args.zero)
     mesh = mesh_for_plan(plan, n_devices=jax.device_count())
     shape = SHAPES[args.shape]
     model = Model(cfg, jnp.float32)
@@ -84,6 +88,7 @@ def main():
             f.write(json.dumps({
                 "tag": f"pp_pod:{args.arch}:{args.shape}:gas{args.gas}",
                 "status": "ok", "mesh": f"pipe2_data{plan.dp}_model{plan.tp}",
+                "zero": plan.zero,
                 "roofline": terms.as_dict(),
                 "collective_bytes": {k: float(v) for k, v in
                                      totals.collective_bytes.items()},

@@ -48,9 +48,15 @@ def parse_plan(args, n_devices: int) -> ParallelPlan:
     else:
         rem = n_devices // max(tp * pp, 1)
         dp = max(rem, 1)
+    if args.no_zero1 and args.zero not in (None, 0):
+        raise SystemExit(f"error: --no-zero1 conflicts with --zero "
+                         f"{args.zero}; pass only --zero")
+    zero = args.zero
+    if zero is None and args.no_zero1:
+        zero = 0  # deprecated spelling of --zero 0
     plan = ParallelPlan(
         dp=dp, tp=tp, pp=pp, virtual_stages=args.virtual_stages,
-        rules=args.rules, zero1=not args.no_zero1, gas=args.gas,
+        rules=args.rules, zero=zero, gas=args.gas,
         precision=args.precision, remat=args.remat, kernels=args.kernels)
     if plan.n_devices != n_devices:
         raise SystemExit(
@@ -82,7 +88,13 @@ def main() -> None:
                          "Pallas kernels (interpret-mode on CPU)")
     ap.add_argument("--rules", choices=["megatron_tp", "fsdp", "dp_only", "tp_only"],
                     default="megatron_tp")
-    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--zero", type=int, choices=[0, 1, 2, 3], default=None,
+                    help="ZeRO stage (core/memplan.py): 0 = replicated DP, "
+                         "1 = shard optimizer states over data (default), "
+                         "2 = + shard the fp32 gradient accumulator, "
+                         "3 = + shard parameters (all-gather on use)")
+    ap.add_argument("--no-zero1", action="store_true",
+                    help="deprecated: same as --zero 0")
     ap.add_argument("--dp", "--data-parallel", dest="dp", type=int, default=None,
                     help="data-parallel ways (default: fill remaining devices)")
     ap.add_argument("--tp", "--model-parallel", dest="tp", type=int, default=None,
@@ -103,13 +115,10 @@ def main() -> None:
     plan = parse_plan(args, n_dev)
     if args.kernels:
         # loud, up-front validation of the kernel fast path against this
-        # architecture's flavour (the per-op fallbacks also warn at trace)
-        if cfg.attn_logit_softcap is not None:
-            print("warning: --kernels with attn_logit_softcap set: the flash "
-                  "kernel has no softcap support, attention falls back to "
-                  "the jnp path (norm/MLP/CE kernels still engage)")
-        # norm and act are fully fused now: rmsnorm + layernorm kernels,
-        # swiglu + gelu gate kernels — no per-op fallback for either knob
+        # architecture's flavour (the per-op fallbacks also warn at trace).
+        # norm, act, and attention are fully fused now: rmsnorm + layernorm
+        # kernels, swiglu + gelu gate kernels, and the flash kernel handles
+        # logit softcap natively — only MoE expert einsums stay jnp
         if cfg.family in ("moe",):
             print("warning: --kernels on an MoE family: expert einsums stay "
                   "jnp (norm/shared-MLP/attention/CE kernels still engage)")
@@ -117,7 +126,7 @@ def main() -> None:
     print(f"arch={cfg.name} params={Model(cfg).n_params():,} "
           f"mesh=(pp={plan.pp},dp={plan.dp},tp={plan.tp})"
           f"{f' v={plan.virtual_stages}' if plan.virtual_stages > 1 else ''} "
-          f"rules={plan.rules} zero1={plan.zero1} gas={plan.gas} "
+          f"rules={plan.rules} zero={plan.zero} gas={plan.gas} "
           f"precision={plan.precision} remat={plan.remat} "
           f"kernels={plan.kernels}")
 

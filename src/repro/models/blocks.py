@@ -65,7 +65,7 @@ def self_attn_block(
     With ``return_kv=True`` also returns the (possibly RoPE'd) K and V,
     which prefill places into the decode cache.  ``policy.kernels`` routes
     the norm through the fused rmsnorm kernel and attention through the
-    Pallas flash kernel (softcap models fall back with a warning)."""
+    Pallas flash kernel (logit softcap is applied in-kernel)."""
     pol = resolve_policy(policy)
     h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps,
                           use_kernel=pol.kernels)

@@ -11,7 +11,6 @@ FlashAttention-2 port, and the reference semantics for the Pallas kernel in
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import Any
 
 import jax
@@ -142,19 +141,14 @@ def attention(
     assert Hq % Hkv == 0, (Hq, Hkv)
     pol = resolve_policy(policy)
     use_flash = use_flash or pol.kernels
-    if use_flash and softcap is not None and Sq > 1:
-        # loud fallback, not silent: the flash kernel has no logit-softcap
-        # support, so softcap models (gemma-style) take the jnp path
-        warnings.warn(
-            "flash attention requested but attn_logit_softcap is set; "
-            "falling back to the chunked jnp attention path",
-            stacklevel=2)
-    if (use_flash and kv_positions is None and softcap is None and Sq > 1
+    if (use_flash and kv_positions is None and Sq > 1
             and isinstance(q_offset, int)):
+        # logit softcap is native to the kernel (tanh cap + its Jacobian in
+        # the backward), so gemma-style models take the fused path too
         from repro.kernels import ops as kernel_ops
         return kernel_ops.flash_attention(
             q, k, v, causal=causal, sliding_window=sliding_window,
-            q_offset=q_offset)
+            softcap=softcap, q_offset=q_offset)
     G = Hq // Hkv
     scale = 1.0 / np.sqrt(hd)
     qg = q.reshape(B, Sq, Hkv, G, hd)

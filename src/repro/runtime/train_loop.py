@@ -3,12 +3,21 @@
 ``ParallelPlan`` carries one point of the paper's full 3D search space
 (Tables III–V, Fig. 9): the parallel decomposition (``dp`` x ``tp`` x ``pp``
 with optional interleaved ``virtual_stages``), the sharding strategy
-(tensor-parallel rule preset), ZeRO-1 on/off, micro-batch count via
-gradient-accumulation steps (GAS), and precision — plus the compute-path
-knobs the paper tunes alongside them: the activation-checkpointing mode
-(``remat``: full | selective | none) and the fused Pallas kernel fast path
-(``kernels``), carried as a :class:`repro.core.compute.ComputePolicy` and
-threaded through every model family and the pipeline stage fn.
+(tensor-parallel rule preset), the ZeRO stage (``zero`` in 0..3, carried as
+a :class:`repro.core.memplan.MemoryPlan`; ``zero1=`` remains as a
+deprecated bool alias), micro-batch count via gradient-accumulation steps
+(GAS), and precision — plus the compute-path knobs the paper tunes
+alongside them: the activation-checkpointing mode (``remat``: full |
+selective | none) and the fused Pallas kernel fast path (``kernels``),
+carried as a :class:`repro.core.compute.ComputePolicy` and threaded through
+every model family and the pipeline stage fn.
+
+The memory axis is pure shardings (see ``core/memplan.py`` for the stage
+semantics): stage >= 1 puts Adam's moments on the data axis, stage >= 2
+additionally constrains the fp32 gradient-accumulation scan carry to the
+same specs (per-microbatch reduce-scatter instead of a full-gradient
+all-reduce), stage 3 shards every parameter leaf over data on its first
+divisible free dim with GSPMD all-gather-on-use.
 
 One ``jit_train_step`` serves every plan on the 3D
 ``("pipe", "data", "model")`` mesh (``launch/mesh.py:mesh_for_plan``):
@@ -40,9 +49,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import memplan as mpl
 from repro.core import precision as prec
 from repro.core import sharding as shd
 from repro.core.compute import DEFAULT_POLICY, ComputePolicy
+from repro.core.memplan import MemoryPlan
 from repro.models.common import ModelConfig
 from repro.models.model import Model
 from repro.optim import AdamWConfig, adamw_init, adamw_update
@@ -57,7 +68,13 @@ class ParallelPlan:
     virtual_stages: int = 1         # extra stage granularity per pipe rank
                                     # (pp*v logical stages; see pipeline_spmd)
     rules: str = "megatron_tp"      # sharding strategy preset
-    zero1: bool = True              # ZeRO-1 optimizer-state sharding
+    zero: int | None = None         # ZeRO stage 0|1|2|3 (core/memplan.py);
+                                    # None -> derive from zero1 (default: 1)
+    zero1: bool | None = None       # DEPRECATED alias: True -> zero=1,
+                                    # False -> zero=0; normalized to
+                                    # (zero >= 1) after resolution — on an
+                                    # existing plan override via zero=, the
+                                    # stage, not this bool
     gas: int = 1                    # gradient accumulation steps
                                     # (== pipeline microbatches when pp > 1)
     precision: str = "bf16"         # bf16 | fp16 | fp32
@@ -75,6 +92,12 @@ class ParallelPlan:
         for name in ("dp", "tp", "pp", "virtual_stages", "gas"):
             if getattr(self, name) < 1:
                 raise ValueError(f"{name} must be >= 1, got {getattr(self, name)}")
+        # resolve the (zero, deprecated zero1) pair: zero wins when set, so
+        # dataclasses.replace(plan, zero=...) always takes effect; zero1 is
+        # normalized to the derived bool for existing readers
+        stage = mpl.resolve_stage(self.zero, self.zero1)
+        object.__setattr__(self, "zero", stage)
+        object.__setattr__(self, "zero1", stage >= 1)
         self.compute_policy()  # validates remat
 
     @property
@@ -90,9 +113,14 @@ class ParallelPlan:
         """The compute-path policy (remat + kernels) this plan carries."""
         return ComputePolicy(remat=self.remat, kernels=self.kernels)
 
+    def memory_plan(self) -> MemoryPlan:
+        """The memory-axis policy (ZeRO stage) this plan carries."""
+        return MemoryPlan(zero=self.zero, data_axis=self.data_axis)
+
     def sharding_rules(self) -> shd.ShardingRules:
         preset = shd.PRESETS[self.rules]
         rules = preset(data_axis=self.data_axis,
+                       model_axis=self.model_axis,
                        pipe_axis=self.pipe_axis if self.pp > 1 else None)
         if self.extra_dp_axes:
             batch_axes = tuple(self.extra_dp_axes) + (self.data_axis,)
@@ -113,20 +141,53 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
-def train_state_shardings(model: Model, mesh: Mesh, plan: ParallelPlan) -> dict:
+def plan_state_shardings(model: Model, mesh: Mesh, plan: ParallelPlan):
+    """(param shapes, param/optimizer/gradient sharding trees) under the
+    plan's :class:`MemoryPlan` — the single source for the executor's
+    in/out shardings, the stage-2 scan-carry constraint, and the dry-run's
+    byte report."""
     pshapes = model.param_shapes()
-    rules = plan.sharding_rules()
-    psh = shd.tree_shardings(pshapes, model.param_axes(), mesh, rules)
-    if plan.zero1:
-        opt_sh = shd.tree_zero_shardings(pshapes, psh, plan.data_axis)
-    else:
-        opt_sh = psh
+    mp = plan.memory_plan()
+    psh = shd.tree_shardings(pshapes, model.param_axes(), mesh,
+                             plan.sharding_rules())
+    psh = mp.param_shardings(pshapes, psh)            # stage 3
+    opt_sh = mp.optimizer_shardings(pshapes, psh)     # stage >= 1
+    grad_sh = mp.grad_shardings(pshapes, psh)         # stage >= 2
+    return pshapes, psh, opt_sh, grad_sh
+
+
+def _state_sharding_dict(mesh: Mesh, psh: Any, opt_sh: Any) -> dict:
     rep = replicated(mesh)
     return {
         "params": psh,
         "opt": {"mu": opt_sh, "nu": opt_sh, "count": rep},
         "loss_scale": jax.tree.map(lambda _: rep, prec.init_loss_scale(False)),
         "step": rep,
+    }
+
+
+def train_state_shardings(model: Model, mesh: Mesh, plan: ParallelPlan) -> dict:
+    _, psh, opt_sh, _ = plan_state_shardings(model, mesh, plan)
+    return _state_sharding_dict(mesh, psh, opt_sh)
+
+
+def train_state_bytes(model: Model, mesh: Mesh, plan: ParallelPlan) -> dict:
+    """Per-device bytes of each train-state class under the plan's ZeRO
+    stage, measured from the actual sharding specs (``prod(shard_shape) *
+    itemsize`` per leaf) — what the dry-run reports next to XLA's peak.
+
+    ``grad_bytes`` is the fp32 accumulation buffer (stage >= 2 shards it);
+    ``opt_bytes`` covers both Adam moments (stage >= 1 shards them);
+    ``param_bytes`` is the storage-dtype parameter tree (stage 3 shards it).
+    """
+    pshapes, psh, opt_sh, grad_sh = plan_state_shardings(model, mesh, plan)
+    f32 = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                       pshapes)
+    return {
+        "zero": plan.zero,
+        "param_bytes": mpl.sharded_bytes(pshapes, psh),
+        "grad_bytes": mpl.sharded_bytes(f32, grad_sh),
+        "opt_bytes": 2 * mpl.sharded_bytes(f32, opt_sh),  # mu + nu
     }
 
 
@@ -163,7 +224,7 @@ def init_train_state(model: Model, key: jax.Array, opt_cfg: AdamWConfig,
 
 
 def build_train_step(model: Model, opt_cfg: AdamWConfig, plan: ParallelPlan,
-                     mesh: Mesh | None = None):
+                     mesh: Mesh | None = None, grad_shardings: Any = None):
     """Returns train_step(state, batch) -> (state, metrics).
 
     pp == 1: the global batch is split into ``gas`` microbatches consumed by
@@ -191,6 +252,20 @@ def build_train_step(model: Model, opt_cfg: AdamWConfig, plan: ParallelPlan,
     # pp > 1 folds all gas microbatches into one pipelined backward pass
     outer_gas = 1 if plan.pp > 1 else plan.gas
 
+    # ZeRO-2: the fp32 accumulator rides the accumulation scan's carry with
+    # the optimizer-shard's data-axis spec, so GSPMD reduce-scatters each
+    # microbatch's gradients into the owning shard instead of all-reducing
+    # full gradients and slicing at the update (core/memplan.py).  Pure
+    # shardings only — no manual gather/restack inside jit (the XLA CPU
+    # SPMD miscompile documented in core/stage_program.py:Segment.tied).
+    if plan.memory_plan().shards_grads and mesh is not None:
+        if grad_shardings is None:  # jit_train_step passes its own copy
+            _, _, _, grad_shardings = plan_state_shardings(model, mesh, plan)
+        gsum_sh = grad_shardings
+        constrain_gsum = lambda t: jax.lax.with_sharding_constraint(t, gsum_sh)
+    else:
+        constrain_gsum = lambda t: t
+
     def loss_fn(params, micro_batch, scale):
         if plan.pp > 1:
             loss, metrics = model.loss_pipelined(
@@ -209,14 +284,15 @@ def build_train_step(model: Model, opt_cfg: AdamWConfig, plan: ParallelPlan,
             return x.reshape(outer_gas, x.shape[0] // outer_gas, *x.shape[1:])
 
         micro = jax.tree.map(split, batch)
-        zero_grads = jax.tree.map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        zero_grads = constrain_gsum(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
 
         def accum(carry, mb):
             gsum, ce_sum, aux_sum = carry
             (_, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, mb, scale)
-            gsum = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+            gsum = constrain_gsum(jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), gsum, grads))
             return (gsum, ce_sum + metrics["ce"], aux_sum + metrics["moe_aux"]), None
 
         (gsum, ce_sum, aux_sum), _ = jax.lax.scan(
@@ -250,11 +326,14 @@ def jit_train_step(model: Model, opt_cfg: AdamWConfig, plan: ParallelPlan,
     """jit-compiled unified train step with explicit in/out shardings.
 
     This is the single executor behind every (dp, tp, pp) plan: TP via the
-    plan's sharding rules, PP via ``pipeline_spmd`` in the loss, ZeRO-1 via
-    data-axis optimizer-state shardings, all under one jit.
+    plan's sharding rules, PP via ``pipeline_spmd`` in the loss, and the
+    ZeRO stage via data-axis shardings of the optimizer states (>= 1), the
+    fp32 gradient accumulator (>= 2), and the parameters themselves (3),
+    all under one jit.
     """
-    step = build_train_step(model, opt_cfg, plan, mesh)
-    state_sh = train_state_shardings(model, mesh, plan)
+    _, psh, opt_sh, grad_sh = plan_state_shardings(model, mesh, plan)
+    step = build_train_step(model, opt_cfg, plan, mesh, grad_shardings=grad_sh)
+    state_sh = _state_sharding_dict(mesh, psh, opt_sh)
     batch_sh = batch_shardings(model.cfg, global_batch, seq_len, mesh, plan)
     rep = replicated(mesh)
     metrics_sh = {"loss": rep, "moe_aux": rep, "grads_finite": rep, "loss_scale": rep}

@@ -53,3 +53,87 @@ def test_preset_names():
     for name in ("megatron_tp", "fsdp", "dp_only", "tp_only"):
         r = shd.PRESETS[name]()
         assert r.name == name
+
+
+def test_plan_rules_honor_custom_axes():
+    # regression: sharding_rules() used to call the preset without
+    # model_axis=, silently keeping "model" for plans renaming that axis
+    from repro.runtime.train_loop import ParallelPlan
+
+    plan = ParallelPlan(model_axis="tensor")
+    r = plan.sharding_rules()
+    assert r.mesh_axis("mlp") == "tensor"
+    assert r.mesh_axis("heads") == "tensor"
+    assert ParallelPlan(data_axis="dpax").sharding_rules().mesh_axis("batch") == "dpax"
+
+
+PROPERTY_CODE = '''
+import random
+import numpy as np, jax
+from jax.sharding import PartitionSpec as P
+from repro.core import sharding as shd
+from repro.launch.mesh import make_mesh_2d
+
+mesh = make_mesh_2d(2, 4)
+rules = shd.megatron_rules()
+random.seed(0)
+pool = list(rules.rules) + [None]
+dims = [1, 2, 3, 4, 6, 8, 12, 16]
+
+def norm(spec, ndim):
+    s = list(spec) + [None] * (ndim - len(spec))
+    return tuple(s)
+
+def flat_axes(spec):
+    return [a for e in spec if e is not None
+            for a in (e if isinstance(e, tuple) else (e,))]
+
+hits_shard = hits_fallback = hits_zero = hits_noop = 0
+for _ in range(400):
+    ndim = random.randint(1, 4)
+    axes = tuple(random.choice(pool) for _ in range(ndim))
+    shape = tuple(random.choice(dims) for _ in range(ndim))
+    spec = shd.partition_spec(shape, axes, mesh, rules)
+    flat = flat_axes(spec)
+    # property 1: a mesh axis never shards two dims
+    assert len(flat) == len(set(flat)), (shape, axes, spec)
+    # property 2: every sharded dim divides its mesh-axis size; anything
+    # indivisible must have fallen back to replication
+    for dim, entry in zip(shape, norm(spec, ndim)):
+        if entry is None:
+            continue
+        hits_shard += 1
+        size = shd._axis_size(mesh, entry)
+        assert size > 1 and dim % size == 0, (dim, entry, size)
+    for dim, logical, entry in zip(shape, axes, norm(spec, ndim)):
+        ax = rules.mesh_axis(logical)
+        if ax is not None and shd._axis_size(mesh, ax) > 1 \
+                and dim % shd._axis_size(mesh, ax) != 0:
+            assert entry is None, (dim, logical, entry)
+            hits_fallback += 1
+    # property 3: zero_partition_spec adds "data" at most once, never
+    # breaks property 1, and is a no-op when data is already used
+    z = shd.zero_partition_spec(shape, spec, mesh, "data")
+    zflat = flat_axes(z)
+    assert len(zflat) == len(set(zflat)), (spec, z)
+    if "data" in flat:
+        assert norm(z, ndim) == norm(spec, ndim), (spec, z)
+        hits_noop += 1
+    else:
+        added = [e for a, e in zip(norm(spec, ndim), norm(z, ndim)) if a != e]
+        assert len(added) <= 1 and all(e == "data" for e in added), (spec, z)
+        free_divisible = any(
+            e is None and d % mesh.shape["data"] == 0 and d >= mesh.shape["data"]
+            for d, e in zip(shape, norm(spec, ndim)))
+        assert bool(added) == free_divisible, (shape, spec, z)
+        hits_zero += bool(added)
+
+# the generator actually exercised every branch
+assert min(hits_shard, hits_fallback, hits_zero, hits_noop) > 10, (
+    hits_shard, hits_fallback, hits_zero, hits_noop)
+print("PROPERTY_OK")
+'''
+
+
+def test_partition_spec_properties(multidev):
+    assert "PROPERTY_OK" in multidev(PROPERTY_CODE, n_devices=8)
