@@ -10,10 +10,13 @@
 #   make bench-pp - family x pp matrix (every family pipelined via the
 #                 StageProgram IR, incl. interleaved v=2); writes +
 #                 validates BENCH_pp_families.json
+#   make bench-comm - CommPlan (qcomm x hierarchy x overlap) matrix at
+#                 zero=3 on 8 virtual devices, with measured-vs-predicted
+#                 collective bytes; writes + validates BENCH_comm.json
 
 PY := python
 
-.PHONY: test lint smoke bench bench-pp
+.PHONY: test lint smoke bench bench-pp bench-comm
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -38,3 +41,9 @@ bench-pp:
 	    --out BENCH_pp_families.json
 	PYTHONPATH=src $(PY) benchmarks/bench_pp_families.py \
 	    --validate BENCH_pp_families.json
+
+bench-comm:
+	PYTHONPATH=src $(PY) benchmarks/bench_comm.py --devices 8 \
+	    --out BENCH_comm.json
+	PYTHONPATH=src $(PY) benchmarks/bench_comm.py \
+	    --validate BENCH_comm.json

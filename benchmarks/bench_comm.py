@@ -1,0 +1,263 @@
+"""bench_comm: wall-time + collective-byte matrix for the CommPlan axis —
+zero=3 weight gathers across (qcomm x hierarchy x overlap), dense and moe,
+on smoke-sized configs over 8 virtual devices (node=2 x dp=2 x tp=2 when
+hierarchical, dp=4 x tp=2 flat).
+
+Each point records three byte measures for the weight un-gather:
+
+  * ``measured``  — ``analysis/hlo.py:comm_bytes`` on a *loop-free*
+    lowering of just the parameter gather (the train step's layer scan
+    hides per-iteration collectives from a flat text count);
+  * ``predicted`` — ``core/costmodel.py:predict_comm_bytes`` from the
+    plan's own (shape, spec) tree, the costmodel side of the acceptance
+    bound (must agree with ``measured`` within 10%);
+  * ``intra``/``inter`` — the predicted two-tier split (hierarchical
+    points pay a larger intra-node total to shrink the inter-node phase).
+
+The matrix doubles as an equivalence check: fp points must reproduce the
+single-device fp32 trajectory exactly; int8 (qcomm) points must stay
+within a bounded loss drift.  Quantized points must cut measured wire
+bytes >= 3x vs the flat fp zero=3 baseline.
+
+  PYTHONPATH=src python benchmarks/bench_comm.py --out BENCH_comm.json
+  make bench-comm
+
+Schema:
+
+  {"config": {seq_len, global_batch, steps, devices, backend,
+              kernels_interpret_mode, precision},
+   "points": [{"family": str, "arch": str,
+               "plan": {dp, tp, pp, node, zero, qcomm, overlap, gas},
+               "compile_s": float, "wall_s_per_step": float,
+               "tokens_per_s": float, "losses": [float, ...],
+               "gather_bytes": {"measured": int, "predicted": float,
+                                "intra": float, "inter": float}}, ...]}
+
+``backend``/``devices``/``kernels_interpret_mode`` carry the same
+machine-readable CPU caveat as the other BENCH files.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+FP_TOL = 1e-4          # fp collectives: exact trajectory (allclose)
+Q_DRIFT_TOL = 0.05     # int8 collectives: bounded relative loss drift
+PRED_TOL = 0.10        # costmodel-vs-measured acceptance bound
+Q_REDUCTION = 3.0      # quantized wire bytes vs flat fp zero=3
+
+FAMILY_CASES = {
+    "dense": ("yi-6b", dict(n_layers=4)),
+    "moe": ("llama4-maverick-400b-a17b", dict(n_layers=4)),
+}
+
+# label -> plan kwargs on top of (zero=3, gas=2, fp32); flat points run
+# dp=4 x tp=2, hierarchical points node=2 x dp=2 x tp=2 (same 8 devices)
+MATRIX = {
+    "z3-flat-fp": dict(),
+    "z3-flat-q": dict(qcomm="gather"),
+    "z3-flat-overlap": dict(overlap=True),
+    "z3-hier-fp": dict(node=2),
+    "z3-hier-q-overlap": dict(node=2, qcomm="gather", overlap=True),
+}
+
+
+def validate(path: str) -> None:
+    with open(path) as f:
+        rec = json.load(f)
+    assert {"config", "points"} <= set(rec), path
+    cfg = rec["config"]
+    assert {"devices", "backend", "kernels_interpret_mode"} <= set(cfg), cfg
+    assert cfg["kernels_interpret_mode"] == (cfg["backend"] == "cpu"), cfg
+    by_fam: dict = {}
+    for p in rec["points"]:
+        assert {"family", "plan", "losses", "wall_s_per_step"} <= set(p), p
+        by_fam.setdefault(p["family"], {})[p["label"]] = p
+    for fam, pts in by_fam.items():
+        assert "ref" in pts and "z3-flat-fp" in pts, (fam, sorted(pts))
+        ref = pts["ref"]["losses"]
+        for label, p in pts.items():
+            if p["plan"].get("qcomm", "none") == "none":
+                drift = max(abs(a - b) for a, b in zip(p["losses"], ref))
+                assert drift <= FP_TOL, (
+                    f"{fam} {label}: fp trajectory drifts {drift:.2e}")
+            else:
+                drift = max(abs(a - b) / abs(b)
+                            for a, b in zip(p["losses"], ref))
+                assert drift <= Q_DRIFT_TOL, (
+                    f"{fam} {label}: int8 loss drift {drift:.3f}")
+        base = pts["z3-flat-fp"]["gather_bytes"]
+        for label, p in pts.items():
+            gb = p.get("gather_bytes")
+            if gb is None:
+                continue
+            err = abs(gb["measured"] - gb["predicted"]) / gb["predicted"]
+            assert err <= PRED_TOL, (
+                f"{fam} {label}: predicted {gb['predicted']:.0f} vs "
+                f"measured {gb['measured']} ({err:.1%})")
+            if p["plan"].get("qcomm", "none") != "none":
+                # hierarchical totals include both phases; the wire win is
+                # still the quantized itemsize on every phase
+                ratio = base["measured"] / (gb["measured"] /
+                                            (1.5 if p["plan"]["node"] > 1
+                                             else 1.0))
+                assert ratio >= Q_REDUCTION, (
+                    f"{fam} {label}: only {ratio:.2f}x below flat fp")
+            if p["plan"].get("node", 1) > 1:
+                assert gb["inter"] < base["measured"], (fam, label, gb)
+    print(f"{path}: schema + comm-matrix equivalence OK "
+          f"({len(rec['points'])} points)")
+
+
+def run_bench(args) -> dict:
+    import time
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.analysis import hlo
+    from repro.configs import get_config
+    from repro.core import commplan as cpl
+    from repro.core import costmodel as cm
+    from repro.data import SyntheticCorpus, make_batch_iterator
+    from repro.launch.mesh import mesh_for_plan, single_device_mesh
+    from repro.models.model import Model
+    from repro.optim import AdamWConfig
+    from repro.runtime import qcollect as qc
+    from repro.runtime.train_loop import (ParallelPlan, init_train_state,
+                                          jit_train_step,
+                                          plan_state_shardings)
+
+    n_dev = jax.device_count()
+    assert n_dev >= 8, "bench-comm needs 8 devices (use --devices 8)"
+
+    def gather_bytes(model, plan):
+        """Measured vs predicted bytes for one un-gather of the plan's
+        parameter tree (loop-free lowering; see module docstring)."""
+        mesh = mesh_for_plan(plan)
+        pshapes, psh, _, _ = plan_state_shardings(model, mesh, plan)
+        cp = plan.comm_plan()
+        mesh_shape = dict(mesh.shape)
+
+        def one(p, sh):
+            spec = cpl.pad_spec(tuple(sh.spec), p.ndim)
+            gathered = cpl.strip_spec(spec, cp.strip_axes)
+            if cp.quantizes and cpl.quant_eligible(
+                    p.shape, spec, mesh_shape, cp.strip_axes, cp.block):
+                return qc.quantized_gather(p, mesh, spec, gathered,
+                                           cp.block, quant_grads=False)
+            return jax.lax.with_sharding_constraint(
+                p, NamedSharding(mesh, P(*gathered)))
+
+        txt = (jax.jit(lambda prm: jax.tree.map(one, prm, psh),
+                       in_shardings=(psh,))
+               .lower(pshapes).compile().as_text())
+        measured = hlo.comm_bytes(txt).get("all-gather", 0)
+        shapes = [tuple(s.shape) for s in jax.tree.leaves(pshapes)]
+        specs = [tuple(sh.spec) for sh in jax.tree.leaves(psh)]
+        pred = cm.predict_comm_bytes(shapes, specs, mesh_shape, cp,
+                                     itemsize=4)
+        return {"measured": int(measured),
+                "predicted": round(pred["total"], 1),
+                "intra": round(pred["intra"], 1),
+                "inter": round(pred["inter"], 1)}
+
+    points = []
+    for fam, (arch, kw) in FAMILY_CASES.items():
+        cfg = get_config(arch).reduced(
+            d_model=128, n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=256,
+            head_dim=32, **kw)
+        model = Model(cfg, jnp.float32)
+        opt = AdamWConfig(lr=1e-3)
+        it = make_batch_iterator(
+            SyntheticCorpus(vocab_size=cfg.vocab_size), seq_len=args.seq_len,
+            global_batch=args.global_batch, prefetch=0)
+        batches = [next(it) for _ in range(args.steps + 1)]
+
+        cases = [("ref", ParallelPlan(gas=2, precision="fp32", zero=0,
+                                      rules="dp_only"))]
+        for label, pkw in MATRIX.items():
+            node = pkw.get("node", 1)
+            cases.append((label, ParallelPlan(
+                node=node, dp=4 // node, tp=2, gas=2, precision="fp32",
+                zero=3, **{k: v for k, v in pkw.items() if k != "node"})))
+
+        for label, plan in cases:
+            mesh = (single_device_mesh() if label == "ref"
+                    else mesh_for_plan(plan))
+            state = init_train_state(model, jax.random.PRNGKey(0), opt, plan)
+            step = jit_train_step(model, opt, plan, mesh,
+                                  args.global_batch, args.seq_len)
+            t0 = time.perf_counter()
+            state, m = step(state, batches[0])
+            jax.block_until_ready(state)
+            compile_s = time.perf_counter() - t0
+            losses, walls = [float(m["loss"])], []
+            for b in batches[1:]:
+                t0 = time.perf_counter()
+                state, m = step(state, b)
+                jax.block_until_ready(state)
+                walls.append(time.perf_counter() - t0)
+                losses.append(float(m["loss"]))
+            wall = float(np.min(walls))
+            rec = {
+                "family": fam, "arch": cfg.name, "label": label,
+                "plan": {"dp": plan.dp, "tp": plan.tp, "pp": plan.pp,
+                         "node": plan.node, "zero": plan.zero,
+                         "qcomm": plan.qcomm, "overlap": plan.overlap,
+                         "gas": plan.gas},
+                "compile_s": round(compile_s, 3),
+                "wall_s_per_step": round(wall, 5),
+                "tokens_per_s": round(
+                    args.global_batch * args.seq_len / wall, 1),
+                "losses": losses,
+            }
+            if label != "ref":
+                rec["gather_bytes"] = gather_bytes(model, plan)
+            points.append(rec)
+            gb = rec.get("gather_bytes")
+            extra = (f" gather {gb['measured']:>9d}B "
+                     f"(pred {gb['predicted']:.0f})" if gb else "")
+            print(f"{fam:5s} {label:17s} | {wall*1e3:8.2f} ms/step "
+                  f"(compile {compile_s:.1f}s) loss0 {losses[0]:.5f}{extra}")
+
+    backend = jax.default_backend()
+    return {
+        "config": {"seq_len": args.seq_len,
+                   "global_batch": args.global_batch, "steps": args.steps,
+                   "devices": n_dev, "backend": backend,
+                   "precision": "fp32",
+                   "kernels_interpret_mode": backend == "cpu"},
+        "points": points,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--devices", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_comm.json")
+    ap.add_argument("--validate", metavar="PATH", default=None)
+    args = ap.parse_args()
+
+    if args.validate:
+        validate(args.validate)
+        return
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+    rec = run_bench(args)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"wrote {args.out} ({len(rec['points'])} points)")
+    validate(args.out)
+
+
+if __name__ == "__main__":
+    main()

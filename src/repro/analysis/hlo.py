@@ -56,6 +56,74 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
     return dict(out)
 
 
+# instruction line with the result shape captured:  = <shape(s)> opcode(
+_RESULT_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s)]*)\s+([a-z0-9-]+)\(")
+
+# ops with a well-defined wire payload (the CommPlan byte-accounting set)
+PAYLOAD_OPS = ("all-gather", "reduce-scatter", "all-reduce",
+               "collective-permute")
+
+
+def _as_text(lowered_or_text) -> str:
+    if isinstance(lowered_or_text, str):
+        return lowered_or_text
+    if hasattr(lowered_or_text, "as_text"):       # jax Compiled
+        return lowered_or_text.as_text()
+    if hasattr(lowered_or_text, "compile"):       # jax Lowered
+        return lowered_or_text.compile().as_text()
+    raise TypeError(
+        f"expected HLO text, Lowered, or Compiled; got {type(lowered_or_text)}")
+
+
+def comm_bytes(lowered_or_text) -> dict[str, int]:
+    """Per-opcode collective *payload* bytes of the optimized module.
+
+    Unlike :func:`collective_bytes` (raw operand-size sum, kept for
+    backwards comparability), this prices what each op actually moves:
+
+    * ``all-gather``     -> output bytes (what lands on every device),
+    * ``reduce-scatter`` -> input bytes (the full tensor being reduced),
+    * ``all-reduce``     -> 2x input bytes (ring = reduce-scatter +
+      all-gather),
+    * ``collective-permute`` -> operand bytes.
+
+    Async ``-done`` halves are skipped (their ``-start`` carries the
+    shapes).  Accepts HLO text, a jax ``Lowered``, or a ``Compiled`` — the
+    number validated against ``core/costmodel.py:predict_comm_bytes``.
+    """
+    text = _as_text(lowered_or_text)
+    out: dict[str, int] = defaultdict(int)
+    for line in text.splitlines():
+        m = _RESULT_RE.search(line)
+        if not m:
+            continue
+        result_txt, op = m.group(1), m.group(2)
+        if op.endswith("-done"):
+            continue
+        base = op[:-len("-start")] if op.endswith("-start") else op
+        if base not in PAYLOAD_OPS:
+            continue
+        call = line[m.end():]
+        operand_b = sum(_shape_bytes(dt, d)
+                        for dt, d in _SHAPE_RE.findall(call))
+        if base == "all-gather":
+            res_b = sum(_shape_bytes(dt, d)
+                        for dt, d in _SHAPE_RE.findall(result_txt))
+            if op.endswith("-start"):
+                res_b -= operand_b   # start result tuple = (inputs, outputs)
+            out[base] += res_b
+        elif base == "all-reduce":
+            out[base] += 2 * operand_b
+        else:                        # reduce-scatter, collective-permute
+            out[base] += operand_b
+    return dict(out)
+
+
+def total_comm_bytes(lowered_or_text) -> int:
+    return sum(comm_bytes(lowered_or_text).values())
+
+
 def count_ops(hlo_text: str, opcode: str) -> int:
     return len(re.findall(rf"\b{re.escape(opcode)}(?:-start)?\(", hlo_text))
 

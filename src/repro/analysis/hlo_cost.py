@@ -12,6 +12,10 @@ accumulates:
   * ``traffic_bytes``    — operand+output bytes of top-level (post-fusion)
                            instructions: an HBM-traffic estimate
   * ``collective_bytes`` — per collective opcode, operand bytes
+  * ``collective_payload_bytes`` — per opcode *wire* payload (all-gather
+                           output / reduce-scatter input / 2x all-reduce),
+                           trip-count-scaled; matches analysis/hlo.py's
+                           ``comm_bytes`` convention
   * ``dot_flops_by_name``— per metadata op_name, for hotspot attribution
 
 Validated against fully-unrolled scans in tests/test_hlo_cost.py.
@@ -216,6 +220,14 @@ class CostTotals:
     traffic_bytes: float = 0.0
     collective_bytes: dict[str, float] = dataclasses.field(
         default_factory=lambda: defaultdict(float))
+    # per-kind *wire payload*: all-gather -> output bytes, reduce-scatter ->
+    # input bytes, all-reduce -> 2x input (ring), others -> operand bytes.
+    # collective_bytes above is the raw operand-size sum (it overcounts
+    # all-gather by ~1/ways and undercounts all-reduce by 2x); payload is
+    # the number comparable to analysis/hlo.py:comm_bytes and the CommPlan
+    # cost model.
+    collective_payload_bytes: dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
     collective_count: dict[str, float] = dataclasses.field(
         default_factory=lambda: defaultdict(float))
     dot_flops_by_name: dict[str, float] = dataclasses.field(
@@ -289,6 +301,18 @@ class HloCost:
                     nbytes = ins.shape.bytes
                 t.collective_bytes[base] += mult * nbytes
                 t.collective_count[base] += mult
+                if not op.endswith("-done"):
+                    # payload convention (see CostTotals): the -done half of
+                    # an async pair only unwraps the in-flight tuple
+                    if base == "all-gather":
+                        payload = float(ins.shape.bytes)
+                        if op.endswith("-start"):
+                            payload -= nbytes  # result tuple = (in, out)
+                    elif base == "all-reduce":
+                        payload = 2.0 * nbytes
+                    else:
+                        payload = float(nbytes)
+                    t.collective_payload_bytes[base] += mult * payload
                 if not inside_fusion:
                     t.traffic_bytes += mult * self._io_bytes(comp, ins)
                 continue

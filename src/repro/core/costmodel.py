@@ -17,16 +17,27 @@ at the bandwidth tier of the TP group span, and the DP gradient
 reduce-scatter/all-gather at the end (ZeRO-1 identical volume, lower
 memory).  Constants are calibrated once against the paper's 22B recipe
 (38.38% of peak) and then *frozen* for every other prediction.
+
+CommPlan terms (core/commplan.py): ``node > 1`` splits every data-group
+collective into an intra-node phase at ``machine.intranode_bw`` plus an
+inter-node phase moving only the node-local 1/dp shard over the NIC share;
+``qcomm`` discounts the zero=3 gather (and, for "both", the gradient
+reduce-scatter) wire volume to int8-plus-scales; ``overlap`` bills only the
+gather time left over after hiding behind the compute stream.  The
+bandwidth coefficients are refittable from measurements via
+:func:`calibrate_bandwidths`, and the predicted collective payloads are
+validated against ``analysis/hlo.py:comm_bytes`` via
+:func:`predict_comm_bytes`.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any
+from typing import Any, Mapping, Sequence
 
 import numpy as np
 
-from repro.core import memplan
+from repro.core import commplan, memplan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +72,10 @@ class Machine:
     matmul_eff: float            # achievable fraction of peak on big GEMMs
     internode_bw: float          # per-GPU share of the NIC, bytes/s
     dp_contention_alpha: float   # extra DP all-reduce cost per log2(nodes)
+    # intra-node collective bandwidth per GPU (Infinity Fabric / ICI tier);
+    # the two-tier CommPlan model routes the hierarchical intra-node phase
+    # here and only the inter-node phase over the NIC share above
+    intranode_bw: float = 100e9
 
     def tp_bandwidth(self, tp: int) -> float:
         raise NotImplementedError
@@ -89,6 +104,7 @@ FRONTIER = FrontierMachine(
     matmul_eff=0.59,   # calibrated once on the paper's 22B recipe, then frozen
     internode_bw=25e9,
     dp_contention_alpha=0.018,
+    intranode_bw=100e9,   # Fig 5: 50+50 GB/s per IF link between GCDs
 )
 
 
@@ -107,6 +123,7 @@ TPU_V5E = V5eMachine(
     matmul_eff=0.55,
     internode_bw=25e9,           # DCN share per chip
     dp_contention_alpha=0.01,
+    intranode_bw=100e9,          # ICI tier within a pod
 )
 
 
@@ -116,28 +133,33 @@ class ParallelCfg:
     pp: int = 1
     mbs: int = 1
     gas: int = 1                 # = number of microbatches m
-    dp: int = 1
-    zero: int | None = None      # ZeRO stage 0|1|2|3 (core/memplan.py);
-                                 # None -> derive from the zero1 alias
-    zero1: bool = True           # deprecated alias (True -> 1, False -> 0)
+    dp: int = 1                  # intra-node data ways when node > 1
+    zero: int = 1                # ZeRO stage 0|1|2|3 (core/memplan.py)
+    node: int = 1                # inter-node data ways (hierarchical mesh)
+    qcomm: str = "none"          # none|gather|both (commplan.QCOMM_MODES)
+    overlap: bool = False        # overlap zero=3 gathers with compute
+    comm_block: int = 32         # int8 quantization block size
     flash_attention: bool = True
     checkpoint_activations: bool = True
 
     @property
     def zero_stage(self) -> int:
-        if self.zero is not None:
-            if self.zero not in memplan.STAGES:
-                raise ValueError(f"zero must be in {memplan.STAGES}")
-            return self.zero
-        return 1 if self.zero1 else 0
+        if self.zero not in memplan.STAGES:
+            raise ValueError(f"zero must be in {memplan.STAGES}")
+        return self.zero
+
+    @property
+    def comm_plan(self) -> commplan.CommPlan:
+        return commplan.CommPlan(qcomm=self.qcomm, block=self.comm_block,
+                                 overlap=self.overlap, node=self.node)
 
     @property
     def n_gpus(self) -> int:
-        return self.tp * self.pp * self.dp
+        return self.tp * self.pp * self.dp * self.node
 
     @property
     def gbs(self) -> int:
-        return self.mbs * self.gas * self.dp
+        return self.mbs * self.gas * self.dp * self.node
 
 
 @dataclasses.dataclass
@@ -206,12 +228,34 @@ def predict(model: GPTSize, cfg: ParallelCfg, machine: Machine = FRONTIER) -> Pr
 
     # ---------------- DP gradient reduction ----------------
     z = cfg.zero_stage
-    if r > 1:
+    nn = cfg.node
+    R = r * nn                                         # total data ways
+    if R > 1:
         grad_vol = 2.0 * N / (p * t)                   # fp16 gradients
         nodes = max(1, cfg.n_gpus // machine.gpus_per_node)
         contention = 1.0 + machine.dp_contention_alpha * math.log2(max(nodes, 1))
         # the NIC is shared by all GPUs of a node during the DP all-reduce
         dp_bw = machine.internode_bw / machine.gpus_per_node
+
+        def dp_time(vol: float) -> float:
+            """One all-gather (or reduce-scatter) of ``vol`` bytes over the
+            data group.  Flat (node==1): a single ring over R ways on the
+            NIC share.  Hierarchical: the CommPlan two-phase collective —
+            an intra-node ring over dp ways at the Infinity-Fabric tier,
+            then an inter-node ring over node ways moving only the 1/dp
+            node-local shard across the NIC (the low-bandwidth win)."""
+            if nn == 1:
+                return (R - 1) / R * vol / dp_bw * contention
+            intra = (r - 1) / r * vol / machine.intranode_bw if r > 1 else 0.0
+            inter = (nn - 1) / nn * (vol / r) / dp_bw * contention
+            return intra + inter
+
+        # qcomm wire discount: int8 payload + one fp32 scale per block,
+        # relative to the 2-byte (bf16/fp16) wire format billed above
+        q_itemsize = (commplan.QUANT_ITEMSIZE
+                      + commplan.SCALE_ITEMSIZE / cfg.comm_block)
+        q_discount = q_itemsize / 2.0
+
         if z >= 2:
             # each of the m microbatches reduce-scatters its full gradient
             # (m x half an all-reduce — the known GAS cost of gradient
@@ -220,9 +264,10 @@ def predict(model: GPTSize, cfg: ParallelCfg, machine: Machine = FRONTIER) -> Pr
             # — its gathers happen on use and are billed below.  The same
             # 1.05 protocol overhead as stage 1 keeps m=1 monotonic.
             halves = m + (1.0 if z == 2 else 0.0)
-            t_dp = halves * (r - 1) / r * grad_vol / dp_bw * contention * 1.05
+            g_disc = q_discount if cfg.qcomm == "both" else 1.0
+            t_dp = halves * dp_time(grad_vol * g_disc) * 1.05
         else:
-            t_dp = 2.0 * (r - 1) / r * grad_vol / dp_bw * contention
+            t_dp = 2.0 * dp_time(grad_vol)
             if z >= 1:
                 t_dp *= 1.05  # reduce-scatter + param all-gather ~ same volume
         if z >= 3:
@@ -231,7 +276,14 @@ def predict(model: GPTSize, cfg: ParallelCfg, machine: Machine = FRONTIER) -> Pr
             # backward, and checkpointing-replay forward re-gather)
             gathers = (3.0 if cfg.checkpoint_activations else 2.0) * m
             param_vol = 2.0 * N / (p * t)
-            t_dp += gathers * (r - 1) / r * param_vol / dp_bw * contention
+            if cfg.qcomm in ("gather", "both"):
+                param_vol *= q_discount
+            t_gather = gathers * dp_time(param_vol)
+            if cfg.overlap:
+                # per-segment prefetch hides gathers behind the GEMM
+                # stream; only the residual past total compute is billed
+                t_gather = max(t_gather - (m + p - 1) * t_comp, 0.0)
+            t_dp += t_gather
     else:
         t_dp = 0.0
 
@@ -248,7 +300,7 @@ def predict(model: GPTSize, cfg: ParallelCfg, machine: Machine = FRONTIER) -> Pr
     # fp32 grad accumulator / Adam moments, each divided by dp when the
     # ZeRO stage shards that class (params at 3, grads at >= 2, opt >= 1)
     per_shard = N / (p * t)
-    p_div, g_div, o_div = memplan.zero_divisors(z, r)
+    p_div, g_div, o_div = memplan.zero_divisors(z, R)
     mem_params = 6.0 * per_shard / p_div
     mem_grads = 4.0 * per_shard / g_div
     mem_opt = 4.0 * per_shard / o_div
@@ -283,6 +335,61 @@ def predict(model: GPTSize, cfg: ParallelCfg, machine: Machine = FRONTIER) -> Pr
             "act": mem_act, "zero": float(z),
         },
     )
+
+
+# ---------------------------------------------------------------------------
+# CommPlan byte prediction + bandwidth calibration (the two-tier model's
+# empirical anchors: predicted bytes validate against analysis/hlo.py's
+# comm_bytes on the compiled module, and the bandwidth coefficients fit
+# against measured step times)
+# ---------------------------------------------------------------------------
+
+
+def predict_comm_bytes(shapes: Sequence[Sequence[int]],
+                       specs: Sequence[Any],
+                       mesh_shape: Mapping[str, int],
+                       cp: commplan.CommPlan,
+                       itemsize: int = 4,
+                       multiplier: float = 1.0) -> dict:
+    """Predicted zero=3 weight all-gather payload bytes per train step.
+
+    Thin bridge over :func:`repro.core.commplan.tree_gather_bytes` so the
+    bench/dryrun layers validate the analytic model against
+    ``analysis/hlo.py:comm_bytes`` measured on the lowered module.
+    ``multiplier`` is the gathers-per-step multiplicity (fwd + remat-replay
+    + bwd re-gathers), calibrated once against the compiled HLO.
+    """
+    return commplan.tree_gather_bytes(shapes, specs, mesh_shape, cp,
+                                      itemsize=itemsize,
+                                      multiplier=multiplier)
+
+
+def calibrate_bandwidths(samples: Sequence[tuple[float, float, float]],
+                         machine: Machine | None = None):
+    """Fit the two-tier bandwidth coefficients from measured collectives.
+
+    ``samples`` is a sequence of ``(intra_bytes, inter_bytes, seconds)``
+    triples — per-step collective payloads split by fabric tier (from
+    :func:`predict_comm_bytes`) against the measured comm time.  Solves the
+    least-squares system ``t = intra/bw_i + inter/bw_x`` for the two
+    effective bandwidths.  Returns ``{"intranode_bw", "internode_bw"}``
+    (per-GPU effective bytes/s; ``internode_bw`` is the NIC *share*, i.e.
+    directly comparable to ``machine.internode_bw / gpus_per_node``), or a
+    ``dataclasses.replace``-d machine when one is given.
+    """
+    arr = np.asarray([(s[0], s[1]) for s in samples], dtype=np.float64)
+    times = np.asarray([s[2] for s in samples], dtype=np.float64)
+    if arr.shape[0] < 2:
+        raise ValueError("calibrate_bandwidths needs >= 2 samples")
+    coef, *_ = np.linalg.lstsq(arr, times, rcond=None)
+    tiny = 1e-18
+    bw_intra = 1.0 / max(float(coef[0]), tiny)
+    bw_inter = 1.0 / max(float(coef[1]), tiny)
+    if machine is None:
+        return {"intranode_bw": bw_intra, "internode_bw": bw_inter}
+    return dataclasses.replace(
+        machine, intranode_bw=bw_intra,
+        internode_bw=bw_inter * machine.gpus_per_node)
 
 
 # ---------------------------------------------------------------------------

@@ -60,37 +60,57 @@ SPACE_INTERLEAVED = SPACE_COMPUTE + (
     Param("vs", (1, 2, 4)),
 )
 
+# the CommPlan axes (core/commplan.py): int8 block-quantized zero=3
+# collectives, a hierarchical node axis splitting data-parallel collectives
+# into intra/inter-node phases, and gather/compute overlap.  qcomm/overlap
+# only bind at zero=3 — trial_plan silently downgrades them elsewhere so
+# the surrogate sees a smooth space instead of a wall of failures.
+SPACE_COMM = SPACE_INTERLEAVED + (
+    Param("qcomm", ("none", "gather", "both")),
+    Param("node", (1, 2)),
+    Param("overlap", (0, 1)),
+)
+
 
 def trial_plan(config: dict, *, gpus_per_node: int = 8,
                rules: str = "megatron_tp", precision: str = "bf16"):
     """Concretize one search-space config into a real 3D ``ParallelPlan``.
 
     The search enumerates (pp, tp, gas, zero, nnodes) plus the compute-path
-    knobs (remat, kernels); dp is whatever tiles the remaining devices
-    (``nnodes * gpus_per_node / (tp * pp)``) — exactly the paper's
-    decomposition.  A legacy ``zero1`` key is honoured as the deprecated
-    alias for stage 0/1 when ``zero`` is absent.  Returns ``None`` when the
-    config cannot tile the device count (the F-objective failure case:
-    callers penalize it below every success so the surrogate learns to
-    avoid it).  ``mbs`` stays a cost-model knob: the executor derives the
-    microbatch size from global_batch / gas.
+    knobs (remat, kernels) and the CommPlan knobs (qcomm, node, overlap);
+    dp is whatever tiles the remaining devices
+    (``nnodes * gpus_per_node / (node * tp * pp)``) — exactly the paper's
+    decomposition.  qcomm/overlap only exist at zero=3 and overlap only at
+    pp=1, so other draws are downgraded to their no-op values rather than
+    failed — a smooth axis, not a wall of F-objective penalties.  Returns
+    ``None`` when the config cannot tile the device count (the F-objective
+    failure case: callers penalize it below every success so the surrogate
+    learns to avoid it).  ``mbs`` stays a cost-model knob: the executor
+    derives the microbatch size from global_batch / gas.
     """
     from repro.runtime.train_loop import ParallelPlan  # lazy: hpo stays numpy-only
 
+    if "zero1" in config:
+        raise ValueError(
+            "the zero1 search key has been removed; pass zero=0|1|2|3 "
+            "(zero1=True was zero=1, zero1=False was zero=0)")
     world = int(config.get("nnodes", 1)) * gpus_per_node
     tp, pp = int(config.get("tp", 1)), int(config.get("pp", 1))
-    if tp < 1 or pp < 1 or world % (tp * pp) != 0:
+    node = int(config.get("node", 1))
+    if tp < 1 or pp < 1 or node < 1 or world % (node * tp * pp) != 0:
         return None
-    if "zero" in config:
-        zero = int(config["zero"])
-    elif "zero1" in config:
-        zero = 1 if config["zero1"] else 0
-    else:
-        zero = 1
+    zero = int(config.get("zero", 1))
+    qcomm = str(config.get("qcomm", "none"))
+    overlap = bool(config.get("overlap", 0))
+    if zero != 3:
+        qcomm, overlap = "none", False
+    if pp > 1:
+        overlap = False
     return ParallelPlan(
-        dp=world // (tp * pp), tp=tp, pp=pp,
+        dp=world // (node * tp * pp), tp=tp, pp=pp, node=node,
         virtual_stages=int(config.get("vs", 1)),
         gas=int(config.get("gas", 1)), zero=zero,
+        qcomm=qcomm, overlap=overlap,
         rules=rules, precision=precision,
         remat=str(config.get("remat", "full")),
         kernels=bool(config.get("kernels", 0)))

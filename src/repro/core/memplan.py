@@ -6,9 +6,9 @@ across the DP group as the stage rises) is what makes 175B/1T fit per GCD at
 all.  "Low-Bandwidth Partitioning" (arXiv 2501.04266) and the
 distributed-training survey (arXiv 2407.20018) both treat the stage choice as
 a primary search axis — so the executor carries it on the ``ParallelPlan``
-(``zero=``; the old ``zero1=`` bool remains as a deprecated alias) and every
-downstream layer (cost model, dry-run, HPO, hillclimber, benchmarks) reads it
-from here.
+(``zero=``; the old ``zero1=`` bool alias has been removed and now raises)
+and every downstream layer (cost model, dry-run, HPO, hillclimber,
+benchmarks) reads it from here.
 
 Stage semantics, expressed purely as GSPMD shardings (no manual
 gather/scatter inside jit — re-stacking sliced params or hand-rolled
@@ -41,7 +41,6 @@ and which collectives move them.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any
 
 import numpy as np
@@ -53,30 +52,22 @@ import numpy as np
 STAGES = (0, 1, 2, 3)
 
 
-def resolve_stage(zero: int | None, zero1: bool | None) -> int:
-    """Resolve the (``zero``, deprecated ``zero1``) pair to a stage.
+def resolve_stage(zero: int | None, zero1: Any = None) -> int:
+    """Resolve ``zero`` to a stage; reject the removed ``zero1`` alias.
 
-    ``zero`` wins whenever it is set (so ``dataclasses.replace(plan,
-    zero=...)`` always takes effect on an already-resolved plan); ``zero1``
-    is only consulted when ``zero`` is None, with a DeprecationWarning.
-    Defaults to stage 1 — the paper's baseline — when neither is given.
+    The ``zero1`` bool alias (and the zero-wins merge semantics it forced on
+    this function) is gone: passing anything but None raises, naming the
+    replacement.  Defaults to stage 1 — the paper's baseline — when ``zero``
+    is not given.
     """
+    if zero1 is not None:
+        raise ValueError(
+            "zero1= has been removed; pass zero=0|1|2|3 instead "
+            "(zero1=True was zero=1, zero1=False was zero=0)")
     if zero is None:
-        if zero1 is not None:
-            warnings.warn(
-                "zero1= is deprecated; pass zero=0|1|2|3 (zero1=True -> "
-                "zero=1, zero1=False -> zero=0)",
-                DeprecationWarning, stacklevel=3)
-            return 1 if zero1 else 0
         return 1
     if zero not in STAGES:
         raise ValueError(f"zero must be one of {STAGES}, got {zero!r}")
-    # NOTE: when zero is set, a disagreeing zero1 is ignored *silently* —
-    # dataclasses.replace passes every stored field back through here, so a
-    # replace(plan, zero=N) against the stale normalized alias (in either
-    # direction, e.g. upgrading a zero=0 plan) is indistinguishable from an
-    # explicit zero1= mismatch; warning would fire on the sanctioned
-    # zero-wins path.  Override the stage via zero=, never zero1=.
     return int(zero)
 
 
@@ -87,6 +78,7 @@ class MemoryPlan:
 
     zero: int = 1                # ZeRO stage
     data_axis: str = "data"      # the DP mesh axis the shards live on
+    node_axis: str | None = None  # hierarchical CommPlan: second ZeRO axis
 
     def __post_init__(self):
         if self.zero not in STAGES:
@@ -113,7 +105,8 @@ class MemoryPlan:
         if not self.shards_params:
             return base_shardings
         from repro.core import sharding as shd
-        return shd.tree_zero_shardings(shape_tree, base_shardings, self.data_axis)
+        return shd.tree_zero_shardings(shape_tree, base_shardings,
+                                       self.data_axis, self.node_axis)
 
     def grad_shardings(self, shape_tree: Any, param_shardings: Any) -> Any:
         """Stage >= 2: gradients live where the optimizer shard lives, so
@@ -123,14 +116,16 @@ class MemoryPlan:
         if not self.shards_grads:
             return param_shardings
         from repro.core import sharding as shd
-        return shd.tree_zero_shardings(shape_tree, param_shardings, self.data_axis)
+        return shd.tree_zero_shardings(shape_tree, param_shardings,
+                                       self.data_axis, self.node_axis)
 
     def optimizer_shardings(self, shape_tree: Any, param_shardings: Any) -> Any:
         """Stage >= 1: Adam mu/nu on the data axis (ZeRO-1 and up)."""
         if not self.shards_optimizer:
             return param_shardings
         from repro.core import sharding as shd
-        return shd.tree_zero_shardings(shape_tree, param_shardings, self.data_axis)
+        return shd.tree_zero_shardings(shape_tree, param_shardings,
+                                       self.data_axis, self.node_axis)
 
 
 # ---------------------------------------------------------------------------

@@ -221,7 +221,8 @@ def tree_shardings(shape_tree: Any, axes_tree: Any, mesh: Mesh, rules: ShardingR
 # ---------------------------------------------------------------------------
 
 def zero_partition_spec(
-    shape: Sequence[int], base_spec: P, mesh: Mesh, dp_axis: str
+    shape: Sequence[int], base_spec: P, mesh: Mesh, dp_axis: str,
+    node_axis: str | None = None,
 ) -> P:
     """Add the DP axis to the first divisible, unsharded dim of ``base_spec``.
 
@@ -229,6 +230,13 @@ def zero_partition_spec(
     equivalent is sharding one tensor dim over the data axis, which yields the
     same 1/DP memory footprint and the same reduce-scatter + all-gather
     communication pattern for the optimizer step.
+
+    With ``node_axis`` (the hierarchical CommPlan, see core/commplan.py), the
+    node axis lands on the *next* free divisible dim, so GSPMD lowers the
+    gather into two per-axis phases — intra-node over ``dp_axis`` groups,
+    inter-node over ``node_axis`` groups.  Leaves without a second free dim
+    fall back to a composite ``(dp, node)`` entry on the same dim: still the
+    full 1/(dp*node) footprint, just a single-phase (flat) collective.
     """
     spec = list(base_spec) + [None] * (len(shape) - len(base_spec))
     used: set[str] = set()
@@ -237,25 +245,45 @@ def zero_partition_spec(
             continue
         for a in (entry if isinstance(entry, tuple) else (entry,)):
             used.add(a)
-    if dp_axis in used:
-        return P(*spec)
-    dp = mesh.shape[dp_axis]
-    if dp <= 1:
-        return P(*spec)
-    for i, (dim, entry) in enumerate(zip(shape, spec)):
-        if entry is None and dim % dp == 0 and dim >= dp:
-            spec[i] = dp_axis
-            return P(*spec)
+
+    def place(axis: str, skip: set[int]) -> int:
+        ways = mesh.shape.get(axis, 1)
+        if axis in used or ways <= 1:
+            return -1
+        for i, (dim, entry) in enumerate(zip(shape, spec)):
+            if i in skip or entry is not None:
+                continue
+            if dim % ways == 0 and dim >= ways:
+                spec[i] = axis
+                used.add(axis)
+                return i
+        return -1
+
+    dp_dim = place(dp_axis, skip=set())
+    if node_axis is not None and node_axis not in used:
+        node_ways = mesh.shape.get(node_axis, 1)
+        if node_ways > 1:
+            node_dim = place(node_axis, skip={dp_dim} if dp_dim >= 0 else set())
+            if node_dim < 0 and dp_dim >= 0:
+                dim = shape[dp_dim]
+                dp = mesh.shape[dp_axis]
+                if dim % (dp * node_ways) == 0:
+                    spec[dp_dim] = (dp_axis, node_axis)
     return P(*spec)
 
 
 def zero_sharding(
-    shape: Sequence[int], base: NamedSharding, dp_axis: str
+    shape: Sequence[int], base: NamedSharding, dp_axis: str,
+    node_axis: str | None = None,
 ) -> NamedSharding:
-    return NamedSharding(base.mesh, zero_partition_spec(shape, base.spec, base.mesh, dp_axis))
+    return NamedSharding(
+        base.mesh,
+        zero_partition_spec(shape, base.spec, base.mesh, dp_axis, node_axis))
 
 
-def tree_zero_shardings(shape_tree: Any, base_shardings: Any, dp_axis: str) -> Any:
+def tree_zero_shardings(shape_tree: Any, base_shardings: Any, dp_axis: str,
+                        node_axis: str | None = None) -> Any:
     return jax.tree.map(
-        lambda s, sh: zero_sharding(s.shape, sh, dp_axis), shape_tree, base_shardings
+        lambda s, sh: zero_sharding(s.shape, sh, dp_axis, node_axis),
+        shape_tree, base_shardings
     )

@@ -92,12 +92,22 @@ class Segment:
     copies — the honest tying semantics (one tensor, cotangents summed
     across stages by autodiff), and it also sidesteps an XLA CPU SPMD
     partitioner miscompile of broadcast-stacked params feeding the
-    stage vmap (wrong numerics, silently)."""
+    stage vmap (wrong numerics, silently).
+
+    ``origin``/``origin_index`` record grouped-lowering provenance: when a
+    family lowers one stacked tree into several per-instance segments (the
+    hybrid multi-segment path), ``origin`` is the full grouped tree whose
+    leading dim indexes instances and ``origin_index`` this segment's slot
+    in it.  ``split_stages`` uses them to rebuild per-stage params as a
+    pure reshape+slice of ``origin`` instead of ``jnp.stack``-ing sliced
+    leaves back together (the XLA CPU SPMD re-stacking miscompile)."""
     name: str
     params: Any
     n: int
     body: Callable[[Any, jax.Array, dict], tuple[jax.Array, dict]]
     tied: bool = False
+    origin: Any = None
+    origin_index: int = 0
 
 
 @dataclasses.dataclass
@@ -140,11 +150,36 @@ def _scan_body(seg: Segment, cast: Callable | None,
 
 
 def run_program(program: StageProgram, x: jax.Array, carry: dict,
-                policy: ComputePolicy | None = None) -> tuple[jax.Array, dict]:
-    """Non-pipelined executor: scan each segment in order."""
+                policy: ComputePolicy | None = None,
+                comm: Any = None) -> tuple[jax.Array, dict]:
+    """Non-pipelined executor: scan each segment in order.
+
+    ``comm`` (a ``runtime/qcollect.py:LayerComm``) is the CommPlan's overlap
+    hook: each non-tied segment's stacked params are split into chunks on
+    the unit dim and chunk k+1's weight gather is *issued* (as a sharding
+    round-trip) before chunk k's compute scans — data-independent, so the
+    scheduler can overlap the slow zero=3 all-gather with compute.  With
+    ``comm=None`` (or a 1-chunk plan) the path is the plain scan ladder.
+    """
     for seg in program.segments:
-        (x, carry), _ = jax.lax.scan(
-            _scan_body(seg, program.cast, policy), (x, carry), seg.params)
+        body = _scan_body(seg, program.cast, policy)
+        params = seg.params
+        if comm is not None and not seg.tied:
+            chunks = comm.plan_chunks(params, seg.n) if comm.overlap else 1
+            if chunks > 1:
+                per = seg.n // chunks
+                split = jax.tree.map(
+                    lambda a: a.reshape(chunks, per, *a.shape[1:]), params)
+                nxt = comm.gather(jax.tree.map(lambda a: a[0], split))
+                for k in range(chunks):
+                    cur = nxt
+                    if k + 1 < chunks:
+                        nxt = comm.gather(
+                            jax.tree.map(lambda a, _k=k: a[_k + 1], split))
+                    (x, carry), _ = jax.lax.scan(body, (x, carry), cur)
+                continue
+            params = comm.gather(params)
+        (x, carry), _ = jax.lax.scan(body, (x, carry), params)
     return x, carry
 
 
@@ -217,12 +252,33 @@ def split_stages(program: StageProgram, n_stages: int,
     chunks = [list(segs[i * k:(i + 1) * k]) for i in range(n_stages)]
     _check_groups_equal(chunks)
     ref = chunks[0]
+
+    def stage_stack(j: int):
+        """Per-stage params for segment slot ``j``, leading with the stage
+        dim.  When every chunk's slot-j segment carries provenance into one
+        grouped tree (``Segment.origin``) with evenly-strided indices, the
+        stack is rebuilt as a pure reshape+slice of that tree — re-stacking
+        sliced leaves with ``jnp.stack`` miscompiles under the XLA CPU SPMD
+        partitioner (wrong numerics, silently), so the stack fallback is
+        only safe for params that never met the partitioner (replicated or
+        freshly built trees)."""
+        origin = ref[j].origin
+        if origin is not None and all(c[j].origin is origin for c in chunks):
+            idx = [c[j].origin_index for c in chunks]
+            m = jax.tree.leaves(origin)[0].shape[0]
+            if m % n_stages == 0:
+                step = m // n_stages
+                off = idx[0]
+                if off < step and idx == [c * step + off for c in range(n_stages)]:
+                    return jax.tree.map(
+                        lambda a: a.reshape(n_stages, step, *a.shape[1:])[:, off],
+                        origin)
+        return jax.tree.map(lambda *leaves: jnp.stack(leaves),
+                            *[c[j].params for c in chunks])
+
     # tied segments (weight-tied across stages) are closed over, not
     # stacked into the stage dim — the stage vmap broadcasts them
-    sp = tuple(
-        jax.tree.map(lambda *leaves: jnp.stack(leaves),
-                     *[c[j].params for c in chunks])
-        for j in range(k) if not ref[j].tied)
+    sp = tuple(stage_stack(j) for j in range(k) if not ref[j].tied)
     bodies = [_scan_body(ref[j], program.cast, policy) for j in range(k)]
 
     def stage_fn(sp_slice, payload):

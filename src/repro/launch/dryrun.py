@@ -22,6 +22,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import hlo as hlo_an
 from repro.analysis import hlo_cost
 from repro.analysis import roofline as rl
 from repro.configs import ASSIGNED, get_config
@@ -63,6 +64,8 @@ def default_plan(multi_pod: bool, *, zero: int | None = None, gas: int = 1,
 
 
 def plan_mesh_name(plan: TrainPlan, multi_pod: bool = False) -> str:
+    if plan.node > 1:
+        return f"node{plan.node}x{plan.pp}x{plan.dp}x{plan.tp}"
     if plan.pp > 1:
         return f"pipe{plan.pp}x{plan.dp}x{plan.tp}"
     return "2x16x16" if multi_pod else "16x16"
@@ -76,9 +79,10 @@ def lower_step(arch: str, shape_name: str, *, multi_pod: bool,
     cfg = cfg or get_config(arch)
     shape = SHAPES[shape_name]
     plan = plan or default_plan(multi_pod)
-    if plan.pp > 1:
-        # 3D plan: the plan itself defines the ("pipe", "data", "model")
-        # mesh; validate against the real device count for a clear error
+    if plan.pp > 1 or plan.node > 1:
+        # 3D/4D plan: the plan itself defines the ("pipe", "data", "model")
+        # — or hierarchical ("node", "pipe", "data", "model") — mesh;
+        # validate against the real device count for a clear error
         mesh = mesh_for_plan(plan)
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
@@ -93,7 +97,8 @@ def lower_step(arch: str, shape_name: str, *, multi_pod: bool,
             "kind": shape.kind,
             "plan": plan.rules + (f"+zero{plan.zero}" if plan.zero else ""),
             "zero": plan.zero,
-            "gas": plan.gas, "remat": plan.remat, "kernels": plan.kernels}
+            "gas": plan.gas, "remat": plan.remat, "kernels": plan.kernels,
+            "node": plan.node, "qcomm": plan.qcomm, "overlap": plan.overlap}
 
     if shape.kind == "train":
         meta["tokens"] = shape.global_batch * shape.seq_len
@@ -198,6 +203,13 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
         byts = totals.traffic_bytes
         coll = {k: float(v) for k, v in totals.collective_bytes.items()}
         coll_total = totals.collective_total
+        # wire-payload views of the same module: trip-count-scaled from the
+        # cost walk, plus the flat single-pass measure hlo.comm_bytes (what
+        # core/costmodel.py:predict_comm_bytes validates against)
+        payload = {k: float(v)
+                   for k, v in totals.collective_payload_bytes.items()}
+        comm_measured = {k: float(v)
+                         for k, v in hlo_an.comm_bytes(hlo_text).items()}
         terms = rl.roofline_terms(flops, byts, coll_total, meta["chips"])
         mf = rl.model_flops(cfg, tokens=meta["tokens"], kind=meta["kind"])
         rec = {
@@ -212,6 +224,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
             "xla_cost_analysis": {"flops": float(cost.get("flops", 0.0)),
                                   "bytes_accessed": float(cost.get("bytes accessed", 0.0))},
             "collective_bytes": coll,
+            "collective_payload_bytes": payload,
+            "comm_bytes": comm_measured,
             "collective_counts": {k: float(v) for k, v in totals.collective_count.items()},
             "collective_bytes_total": coll_total,
             "unknown_trip_loops": totals.unknown_trip_loops,
@@ -268,6 +282,13 @@ def main() -> None:
                     help="data-parallel ways of an explicit plan (default 16)")
     ap.add_argument("--tp", type=int, default=None,
                     help="tensor-parallel ways of an explicit plan (default 16)")
+    ap.add_argument("--node", type=int, default=1,
+                    help="hierarchical node-axis ways (4D CommPlan mesh)")
+    ap.add_argument("--qcomm", choices=("none", "gather", "both"),
+                    default="none",
+                    help="int8 block-quantized zero=3 collectives")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlap zero=3 weight gathers with compute (pp=1)")
     ap.add_argument("--out", default=None, help="append JSON records here")
     ap.add_argument("--print-memory", action="store_true")
     args = ap.parse_args()
@@ -277,7 +298,8 @@ def main() -> None:
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
     explicit_plan = (args.pp > 1 or args.gas > 1 or args.virtual_stages > 1
                      or args.dp is not None or args.tp is not None
-                     or args.zero is not None)
+                     or args.zero is not None or args.node > 1
+                     or args.qcomm != "none" or args.overlap)
 
     def plan_for(mp: bool):
         if not explicit_plan:
@@ -285,6 +307,8 @@ def main() -> None:
         # mirror default_plan's pod-as-extra-DP axis so multi-pod records
         # keep the batch sharded over the pod axis of the production mesh
         return TrainPlan(dp=args.dp or 16, tp=args.tp or 16, pp=args.pp,
+                         node=args.node, qcomm=args.qcomm,
+                         overlap=args.overlap,
                          virtual_stages=args.virtual_stages, gas=args.gas,
                          precision="bf16", zero=args.zero,
                          extra_dp_axes=("pod",) if (mp and args.pp == 1) else ())

@@ -61,7 +61,7 @@ VARIANTS = {
         plan_fn=lambda p: dataclasses.replace(
             p, rule_overrides=(("seq", "model"),)),
         note="sequence-parallel residual stream (Megatron-SP flavoured)"),
-    "no_zero1": _v(
+    "zero0": _v(
         plan_fn=lambda p: dataclasses.replace(p, zero=0),
         note="replicated optimizer states (paper's ZeRO-1 ablation)"),
     # MemoryPlan points: the ZeRO stage ladder (core/memplan.py) — each
@@ -76,6 +76,19 @@ VARIANTS = {
         note="ZeRO-3: every param leaf sharded over data on its first "
              "divisible free dim (generalizes the old embed-only fsdp "
              "preset); GSPMD all-gathers weights on use"),
+    # CommPlan points (core/commplan.py): low-bandwidth zero=3 collectives
+    "zero3_qcomm": _v(
+        plan_fn=lambda p: dataclasses.replace(p, zero=3, qcomm="gather"),
+        note="int8 block-quantized weight all-gathers: ~3.6x fewer bytes "
+             "on the wire per gather (int8 payload + fp32 scale per block)"),
+    "zero3_overlap": _v(
+        plan_fn=lambda p: dataclasses.replace(p, zero=3, overlap=True),
+        note="per-chunk weight gathers interleaved with the layer-stack "
+             "scan: chunk k+1's gather overlaps chunk k's compute"),
+    "zero3_qcomm_overlap": _v(
+        plan_fn=lambda p: dataclasses.replace(p, zero=3, qcomm="gather",
+                                              overlap=True),
+        note="quantized + overlapped gathers combined"),
     "moe_dp_attn": _v(
         plan_fn=lambda p: dataclasses.replace(
             p, rule_overrides=(("heads", None), ("kv_heads", None),
@@ -171,8 +184,9 @@ def main():
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     plan_matrix = {
-        "qwen3": ["baseline", "pad_vocab256", "seq_shard", "gas4", "fsdp", "no_zero1",
-                  "zero2", "zero3",
+        "qwen3": ["baseline", "pad_vocab256", "seq_shard", "gas4", "fsdp", "zero0",
+                  "zero2", "zero3", "zero3_qcomm", "zero3_overlap",
+                  "zero3_qcomm_overlap",
                   "moe_dp_attn+seq", "fsdp_seq", "pp2_gas8", "pp4_gas8",
                   "pp2_v2", "remat_selective", "remat_none",
                   "remat_selective+gas4"],

@@ -58,6 +58,18 @@ def make_mesh_3d(pipe: int, data: int, model: int):
     return _mesh((pipe, data, model), ("pipe", "data", "model"))
 
 
+def make_mesh_4d(node: int, pipe: int, data: int, model: int):
+    """The hierarchical executor's 4D mesh: ("node", "pipe", "data", "model").
+
+    Node-major device order: with the "node" axis first, each "data" group
+    spans *adjacent* device ids (one node's fast intra-node links) and each
+    "node" group spans strided ids (the slow inter-node fabric).  ZeRO specs
+    that carry both axes (see core/commplan.py) then lower to two-phase
+    intra-node-then-inter-node collectives.
+    """
+    return _mesh((node, pipe, data, model), ("node", "pipe", "data", "model"))
+
+
 def make_pipeline_mesh(pipe: int, data: int = 1):
     """Mesh for pipeline-parallel experiments: stages on the "pipe" axis."""
     return _mesh((pipe, data), ("pipe", "data"))
@@ -68,27 +80,37 @@ def single_device_mesh():
 
 
 def validate_plan_shape(pipe: int, data: int, model: int,
-                        n_devices: int | None = None) -> None:
-    """Raise a clear error when (pp, dp, tp) cannot tile the device count."""
-    for name, v in (("pp", pipe), ("dp", data), ("tp", model)):
+                        n_devices: int | None = None,
+                        node: int = 1) -> None:
+    """Raise a clear error when (node, pp, dp, tp) cannot tile the devices."""
+    for name, v in (("pp", pipe), ("dp", data), ("tp", model),
+                    ("node", node)):
         if v < 1:
             raise ValueError(f"--{name} must be >= 1, got {v}")
     n = jax.device_count() if n_devices is None else n_devices
-    if pipe * data * model != n:
+    want = node * pipe * data * model
+    plan_txt = f"pp={pipe} x dp={data} x tp={model}"
+    if node > 1:
+        plan_txt = f"node={node} x " + plan_txt
+    if want != n:
         raise ValueError(
-            f"parallel plan pp={pipe} x dp={data} x tp={model} = "
-            f"{pipe * data * model} devices, but jax.device_count() = {n}. "
+            f"parallel plan {plan_txt} = "
+            f"{want} devices, but jax.device_count() = {n}. "
             f"Pick factors whose product matches the device count "
-            f"(e.g. set XLA_FLAGS=--xla_force_host_platform_device_count={pipe * data * model}).")
+            f"(e.g. set XLA_FLAGS=--xla_force_host_platform_device_count={want}).")
 
 
 def mesh_for_plan(plan, n_devices: int | None = None, *, validate: bool = True):
-    """Build the 3D ("pipe", "data", "model") mesh a ParallelPlan asks for.
+    """Build the mesh a ParallelPlan asks for.
 
     ``plan`` is any object with ``pp``/``dp``/``tp`` ints (a
     :class:`repro.runtime.train_loop.ParallelPlan`).  pp == 1 still yields a
     3D mesh with a size-1 pipe axis, so one executor covers every plan.
+    Plans with ``node > 1`` get the 4D hierarchical mesh instead.
     """
+    node = int(getattr(plan, "node", 1) or 1)
     if validate:
-        validate_plan_shape(plan.pp, plan.dp, plan.tp, n_devices)
+        validate_plan_shape(plan.pp, plan.dp, plan.tp, n_devices, node=node)
+    if node > 1:
+        return make_mesh_4d(node, plan.pp, plan.dp, plan.tp)
     return make_mesh_3d(plan.pp, plan.dp, plan.tp)

@@ -40,27 +40,24 @@ def parse_plan(args, n_devices: int) -> ParallelPlan:
     """
     tp = args.tp if args.tp is not None else 1
     pp = args.pp
+    node = args.node
     if args.dp is not None:
         dp = args.dp
         if args.tp is None:
-            rem = n_devices // max(dp * pp, 1)
+            rem = n_devices // max(node * dp * pp, 1)
             tp = max(rem, 1)
     else:
-        rem = n_devices // max(tp * pp, 1)
+        rem = n_devices // max(node * tp * pp, 1)
         dp = max(rem, 1)
-    if args.no_zero1 and args.zero not in (None, 0):
-        raise SystemExit(f"error: --no-zero1 conflicts with --zero "
-                         f"{args.zero}; pass only --zero")
-    zero = args.zero
-    if zero is None and args.no_zero1:
-        zero = 0  # deprecated spelling of --zero 0
     plan = ParallelPlan(
-        dp=dp, tp=tp, pp=pp, virtual_stages=args.virtual_stages,
-        rules=args.rules, zero=zero, gas=args.gas,
+        dp=dp, tp=tp, pp=pp, node=node, virtual_stages=args.virtual_stages,
+        rules=args.rules, zero=args.zero, gas=args.gas,
+        qcomm=args.qcomm, overlap=args.overlap, comm_block=args.comm_block,
         precision=args.precision, remat=args.remat, kernels=args.kernels)
     if plan.n_devices != n_devices:
         raise SystemExit(
-            f"error: dp={dp} x tp={tp} x pp={pp} = {plan.n_devices} devices "
+            f"error: node={node} x dp={dp} x tp={tp} x pp={pp} = "
+            f"{plan.n_devices} devices "
             f"but jax.device_count() = {n_devices}; adjust --dp/--tp/--pp "
             f"(or XLA_FLAGS=--xla_force_host_platform_device_count=...)")
     return plan
@@ -93,8 +90,22 @@ def main() -> None:
                          "1 = shard optimizer states over data (default), "
                          "2 = + shard the fp32 gradient accumulator, "
                          "3 = + shard parameters (all-gather on use)")
-    ap.add_argument("--no-zero1", action="store_true",
-                    help="deprecated: same as --zero 0")
+    ap.add_argument("--qcomm", choices=["none", "gather", "both"],
+                    default="none",
+                    help="CommPlan quantized collectives (zero=3 only): "
+                         "gather = int8 block-quantize the weight "
+                         "all-gathers; both = also fake-quantize the "
+                         "gradient path (qgZ precision model)")
+    ap.add_argument("--comm-block", type=int, default=32,
+                    help="qcomm quantization block size (last-dim elements "
+                         "per int8 scale group)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlap zero=3 per-chunk weight gathers with the "
+                         "layer-stack compute (pp=1 only)")
+    ap.add_argument("--node", type=int, default=1,
+                    help="hierarchical node axis ways: data collectives "
+                         "split into intra-node + inter-node phases over a "
+                         "4D (node, pipe, data, model) mesh")
     ap.add_argument("--dp", "--data-parallel", dest="dp", type=int, default=None,
                     help="data-parallel ways (default: fill remaining devices)")
     ap.add_argument("--tp", "--model-parallel", dest="tp", type=int, default=None,
@@ -123,12 +134,15 @@ def main() -> None:
             print("warning: --kernels on an MoE family: expert einsums stay "
                   "jnp (norm/shared-MLP/attention/CE kernels still engage)")
     mesh = mesh_for_plan(plan)
+    node_s = f"node={plan.node}," if plan.node > 1 else ""
+    comm_s = (f" qcomm={plan.qcomm} overlap={plan.overlap}"
+              if (plan.qcomm != "none" or plan.overlap) else "")
     print(f"arch={cfg.name} params={Model(cfg).n_params():,} "
-          f"mesh=(pp={plan.pp},dp={plan.dp},tp={plan.tp})"
+          f"mesh=({node_s}pp={plan.pp},dp={plan.dp},tp={plan.tp})"
           f"{f' v={plan.virtual_stages}' if plan.virtual_stages > 1 else ''} "
           f"rules={plan.rules} zero={plan.zero} gas={plan.gas} "
           f"precision={plan.precision} remat={plan.remat} "
-          f"kernels={plan.kernels}")
+          f"kernels={plan.kernels}{comm_s}")
 
     model = Model(cfg, jnp.float32 if args.precision == "fp32" else jnp.bfloat16)
     opt = AdamWConfig(lr=cosine_schedule(args.lr, 10, args.steps))

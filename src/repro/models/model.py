@@ -103,13 +103,18 @@ def _n_stack(cfg: ModelConfig) -> int:
 class Model:
     def __init__(self, cfg: ModelConfig, compute_dtype: Any = jnp.bfloat16,
                  q_chunk: int = 1024,
-                 compute: ComputePolicy | None = None):
+                 compute: ComputePolicy | None = None,
+                 comm: Any = None):
         self.cfg = cfg
         self.compute_dtype = compute_dtype
         self.q_chunk = q_chunk
         # compute-path policy (remat mode + fused-kernel routing); None keeps
         # the seed behaviour: full remat on every stack, jnp compute path
         self.compute = resolve_policy(compute)
+        # communication-path hook (runtime/qcollect.py:LayerComm): when the
+        # plan overlaps weight gathers with compute, run_program consumes it
+        # for per-chunk gathers of the layer stack; None = plain scans
+        self.comm = comm
 
     # ------------------------------------------------------------------
     # Specs / init
@@ -173,13 +178,23 @@ class Model:
     # ------------------------------------------------------------------
     # StageProgram lowering: the family-agnostic layer-stack IR
     # ------------------------------------------------------------------
-    def stage_program(self, params: dict) -> sp.StageProgram:
+    def stage_program(self, params: dict,
+                      multi_segment: bool = False) -> sp.StageProgram:
         """Lower this family's layer stack into the StageProgram IR
         (``core/stage_program.py``): a tagged segment sequence plus the
         carry contract, consumed by both the non-pipelined executor and
         the pp>1 pipeline.  ``params`` is the *storage-dtype* tree — the
         executor casts slices to compute dtype inside each scan body so
         the scan transpose accumulates per-microbatch gradients in fp32.
+
+        ``multi_segment=True`` (hybrid only) lowers the alternating zamba2
+        pattern into an explicit two-segment-kind sequence
+        ``[mamba_i, shared] * n_super`` instead of one fused "super"
+        segment: each mamba segment carries ``origin``/``origin_index``
+        provenance into the grouped stack so ``split_stages``'s grouped
+        path rebuilds per-stage params as a pure reshape+slice (no
+        re-stacking), and the weight-tied shared block becomes a
+        ``tied=True`` segment closed over by every stage.
         """
         cfg = self.cfg
         pol = self.compute
@@ -214,10 +229,27 @@ class Model:
             per = cfg.n_layers // n_super
             grouped = jax.tree.map(
                 lambda a: a.reshape(n_super, per, *a.shape[1:]), layer_params)
-            segments = (sp.Segment(
-                "super", grouped, n_super,
-                ssm.hybrid_segment_body(cfg, pol, self.q_chunk,
-                                        params["shared"], cast)),)
+            if multi_segment:
+                # explicit [mamba_i, shared] * n_super sequence (see
+                # docstring); the dim-1 lead on the shared params is a pure
+                # reshape so the tied segment scans like any other
+                shared_stacked = jax.tree.map(lambda a: a[None],
+                                              params["shared"])
+                mamba_body = ssm.segment_body(cfg, pol)
+                shared_body = blocks.segment_body(cfg, pol, self.q_chunk)
+                seg_list = []
+                for i in range(n_super):
+                    seg_list.append(sp.Segment(
+                        "mamba", jax.tree.map(lambda a, _i=i: a[_i], grouped),
+                        per, mamba_body, origin=grouped, origin_index=i))
+                    seg_list.append(sp.Segment(
+                        "shared", shared_stacked, 1, shared_body, tied=True))
+                segments = tuple(seg_list)
+            else:
+                segments = (sp.Segment(
+                    "super", grouped, n_super,
+                    ssm.hybrid_segment_body(cfg, pol, self.q_chunk,
+                                            params["shared"], cast)),)
             carries = aux
         elif fam == "encdec":
             segments = (sp.Segment(
@@ -266,7 +298,7 @@ class Model:
             inputs["memory"] = self.encode(params, batch["frames"])
         prog = self.stage_program(params)
         x, carry = sp.run_program(prog, x, prog.init_carry(inputs),
-                                  policy=self.compute)
+                                  policy=self.compute, comm=self.comm)
         x = layers.apply_norm(x, cparams["final_norm"], cfg.norm, cfg.rms_eps,
                               use_kernel=self.compute.kernels)
         return x, carry.get("aux", jnp.float32(0.0))
@@ -301,8 +333,8 @@ class Model:
 
     def loss_pipelined(self, params: dict, batch: dict, *, mesh: Any,
                        pp: int, n_micro: int, virtual_stages: int = 1,
-                       pipe_axis: str = "pipe",
-                       data_axis: str = "data") -> tuple[jax.Array, dict]:
+                       pipe_axis: str = "pipe", data_axis: str = "data",
+                       multi_segment: bool = False) -> tuple[jax.Array, dict]:
         """Same objective as :meth:`loss`, with the layer stack run as a
         ``pp``-stage (``virtual_stages``-interleaved when > 1) pipeline —
         for *every* model family, via the StageProgram IR.
@@ -330,7 +362,7 @@ class Model:
             raise ValueError(f"batch {B} not divisible by n_micro={n_micro}")
 
         pol = self.compute
-        prog = self.stage_program(params)
+        prog = self.stage_program(params, multi_segment=multi_segment)
         stage_params, stage_fn = sp.split_stages(
             prog, pp * virtual_stages, policy=pol)
 

@@ -1,0 +1,239 @@
+"""Quantized / staged collectives: the CommPlan's jax executor.
+
+Implements the three CommPlan mechanisms (see ``core/commplan.py`` for
+semantics) as *pure GSPMD shardings* — no manual collectives, honoring the
+standing XLA CPU SPMD caveat (no re-stacking of sliced params):
+
+  * ``quantized_gather`` — the int8 weight all-gather.  The forward path
+    block-quantizes the sharded fp parameter, then applies **two** sharding
+    constraints to the int8 payload (and its fp32 scales): first the leaf's
+    own sharded spec (the *pin*), then the gathered spec.  The pin matters:
+    with a single gathered-spec annotation the partitioner propagates the
+    replicated sharding backward through the elementwise quant chain and
+    re-shards the *fp32* value — the all-gather silently runs at full width
+    (measured).  Pinning the s8 tensor first forces the reshard to happen
+    between the two annotations, i.e. on the int8 payload.  The backward
+    pass is a straight-through estimator: ``round`` is piecewise-constant,
+    so the cotangent passes unchanged (``qcomm="both"`` additionally block
+    fake-quantizes it — qgZ's gradient-precision model).
+  * ``CommExec.prepare`` — applied to the param tree at the top of the
+    loss: round-trips every quant-eligible leaf (all of them when overlap
+    is off; everything *except* the layer stack when overlap is on, so the
+    per-chunk gathers below stay the only gathers of the stack).
+  * ``LayerComm`` — the overlap hook ``core/stage_program.py:run_program``
+    consumes: splits a segment's stacked params into chunks and gathers
+    chunk k+1 before chunk k's compute scans (fp leaves via a single
+    gathered-spec constraint, quantized leaves via the round-trip).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import commplan as cpl
+
+
+# ---------------------------------------------------------------------------
+# Block quantization (per-block symmetric int8, fp32 scales + accumulate)
+# ---------------------------------------------------------------------------
+
+def block_quantize(x: jax.Array, block: int) -> tuple[jax.Array, jax.Array]:
+    """(int8 payload, fp32 per-block scales); blocks tile the last dim."""
+    nb = x.shape[-1] // block
+    xb = x.astype(jnp.float32).reshape(*x.shape[:-1], nb, block)
+    s = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    s = jnp.maximum(s, jnp.float32(1e-30))
+    q = jnp.round(xb / s[..., None]).astype(jnp.int8)
+    return q, s
+
+
+def block_dequantize(q: jax.Array, s: jax.Array, shape: tuple,
+                     dtype: Any) -> jax.Array:
+    return (q.astype(jnp.float32) * s[..., None]).reshape(shape).astype(dtype)
+
+
+def block_fake_quant(x: jax.Array, block: int) -> jax.Array:
+    """Value-only quantization round-trip (no sharding motion) — the
+    precision model applied to gradient cotangents under qcomm="both"."""
+    q, s = block_quantize(x, block)
+    return block_dequantize(q, s, x.shape, x.dtype)
+
+
+def _named(mesh: Mesh, spec: tuple) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def quantized_gather(p: jax.Array, mesh: Mesh, pin_spec: tuple,
+                     gathered_spec: tuple, block: int,
+                     quant_grads: bool) -> jax.Array:
+    """int8 all-gather round-trip with straight-through backward."""
+    pin_q, pin_s = cpl.quant_specs(pin_spec)
+    gath_q, gath_s = cpl.quant_specs(gathered_spec)
+
+    @jax.custom_vjp
+    def gather(x):
+        return _roundtrip(x)
+
+    def _roundtrip(x):
+        q, s = block_quantize(x, block)
+        # pin the payload to the leaf's own sharded spec *before* asking
+        # for the gathered one — see module docstring
+        q = jax.lax.with_sharding_constraint(q, _named(mesh, pin_q))
+        s = jax.lax.with_sharding_constraint(s, _named(mesh, pin_s))
+        q = jax.lax.with_sharding_constraint(q, _named(mesh, gath_q))
+        s = jax.lax.with_sharding_constraint(s, _named(mesh, gath_s))
+        return block_dequantize(q, s, x.shape, x.dtype)
+
+    def fwd(x):
+        return _roundtrip(x), None
+
+    def bwd(_, g):
+        if quant_grads:
+            return (block_fake_quant(g, block),)
+        return (g,)
+
+    gather.defvjp(fwd, bwd)
+    return gather(p)
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf comm plans over the parameter tree
+# ---------------------------------------------------------------------------
+
+class _Leaf:
+    """Static comm decision for one parameter leaf (not a pytree)."""
+
+    __slots__ = ("shape", "spec", "active", "quant")
+
+    def __init__(self, shape: tuple, spec: tuple, active: bool, quant: bool):
+        self.shape = shape
+        self.spec = spec
+        self.active = active
+        self.quant = quant
+
+
+def _fit_spec(spec: tuple, shape: tuple, mesh: Mesh) -> tuple:
+    """Drop entries the (possibly reshaped) leaf cannot carry: axes missing
+    from the mesh or not dividing the dim fall back to replication."""
+    out = []
+    for dim, entry in zip(shape, spec):
+        axes = cpl.entry_axes(entry)
+        if not axes:
+            out.append(None)
+            continue
+        if any(a not in mesh.shape for a in axes):
+            out.append(None)
+            continue
+        size = cpl.entry_size(entry, mesh.shape)
+        out.append(entry if size <= 1 or dim % size == 0 else None)
+    return tuple(out)
+
+
+class CommExec:
+    """The CommPlan bound to a concrete mesh + stage-3 sharding tree."""
+
+    def __init__(self, cp: cpl.CommPlan, mesh: Mesh, pshapes: Any,
+                 shardings: Any, layers_key: str = "layers"):
+        self.cp = cp
+        self.mesh = mesh
+        self.layers_key = layers_key
+        strip = cp.strip_axes
+        mesh_shape = dict(mesh.shape)
+
+        def leaf_info(sds, sh):
+            shape = tuple(sds.shape)
+            spec = tuple(sh.spec)
+            active = cpl.gathers_over(spec, strip)
+            quant = (cp.quantizes and
+                     cpl.quant_eligible(shape, spec, mesh_shape, strip,
+                                        cp.block))
+            return _Leaf(shape, spec, active, quant)
+
+        self._info = jax.tree.map(leaf_info, pshapes, shardings)
+
+    # -- the upfront round-trip ----------------------------------------
+    def _roundtrip_leaf(self, leaf: jax.Array, info: _Leaf) -> jax.Array:
+        if not info.quant:
+            return leaf
+        pin = _fit_spec(cpl.pad_spec(info.spec, leaf.ndim), leaf.shape,
+                        self.mesh)
+        gathered = cpl.strip_spec(pin, self.cp.strip_axes)
+        return quantized_gather(leaf, self.mesh, pin, gathered,
+                                self.cp.block, self.cp.quantizes_grads)
+
+    def prepare(self, params: dict) -> dict:
+        """Round-trip quant-eligible leaves; under overlap the layer stack
+        is left sharded for :class:`LayerComm` to gather per chunk."""
+        out = {}
+        for key, sub in params.items():
+            if self.cp.overlap and key == self.layers_key:
+                out[key] = sub
+            else:
+                out[key] = jax.tree.map(self._roundtrip_leaf, sub,
+                                        self._info[key])
+        return out
+
+    # -- the overlap hook ----------------------------------------------
+    @property
+    def layer_comm(self) -> "LayerComm | None":
+        if not self.cp.overlap:
+            return None
+        return LayerComm(self.cp, self.mesh, self._info[self.layers_key])
+
+
+class LayerComm:
+    """Chunked weight gathers for ``run_program`` (see module docstring)."""
+
+    def __init__(self, cp: cpl.CommPlan, mesh: Mesh, info: Any):
+        self.cp = cp
+        self.mesh = mesh
+        self._info = info
+        self._mesh_shape = dict(mesh.shape)
+
+    @property
+    def overlap(self) -> bool:
+        return self.cp.overlap
+
+    def plan_chunks(self, tree: Any, n: int) -> int:
+        """Largest chunk count <= overlap_chunks that divides ``n`` and
+        keeps every leaf's leading-dim sharding divisible per chunk."""
+        leaves = jax.tree.leaves(tree)
+        infos = jax.tree.leaves(self._info,
+                                is_leaf=lambda x: isinstance(x, _Leaf))
+        if len(leaves) != len(infos):
+            return 1
+        for chunks in range(min(self.cp.overlap_chunks, n), 1, -1):
+            if n % chunks != 0:
+                continue
+            per = n // chunks
+            ok = True
+            for leaf, info in zip(leaves, infos):
+                lead = cpl.pad_spec(info.spec, leaf.ndim)[0]
+                ways = cpl.entry_size(lead, self._mesh_shape)
+                if ways > 1 and per % ways != 0:
+                    ok = False
+                    break
+            if ok:
+                return chunks
+        return 1
+
+    def gather(self, tree: Any) -> Any:
+        """Gather one chunk (or a whole segment) of stacked layer params."""
+
+        def one(leaf, info):
+            if not info.active:
+                return leaf
+            pin = _fit_spec(cpl.pad_spec(info.spec, leaf.ndim), leaf.shape,
+                            self.mesh)
+            gathered = cpl.strip_spec(pin, self.cp.strip_axes)
+            if info.quant:
+                return quantized_gather(leaf, self.mesh, pin, gathered,
+                                        self.cp.block,
+                                        self.cp.quantizes_grads)
+            return jax.lax.with_sharding_constraint(
+                leaf, _named(self.mesh, gathered))
+
+        return jax.tree.map(one, tree, self._info)

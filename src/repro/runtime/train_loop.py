@@ -2,15 +2,22 @@
 
 ``ParallelPlan`` carries one point of the paper's full 3D search space
 (Tables III–V, Fig. 9): the parallel decomposition (``dp`` x ``tp`` x ``pp``
-with optional interleaved ``virtual_stages``), the sharding strategy
-(tensor-parallel rule preset), the ZeRO stage (``zero`` in 0..3, carried as
-a :class:`repro.core.memplan.MemoryPlan`; ``zero1=`` remains as a
-deprecated bool alias), micro-batch count via gradient-accumulation steps
+with optional interleaved ``virtual_stages`` and an optional hierarchical
+``node`` axis), the sharding strategy (tensor-parallel rule preset), the
+ZeRO stage (``zero`` in 0..3, carried as a
+:class:`repro.core.memplan.MemoryPlan`; the old ``zero1=`` bool alias has
+been removed and raises), micro-batch count via gradient-accumulation steps
 (GAS), and precision — plus the compute-path knobs the paper tunes
 alongside them: the activation-checkpointing mode (``remat``: full |
 selective | none) and the fused Pallas kernel fast path (``kernels``),
 carried as a :class:`repro.core.compute.ComputePolicy` and threaded through
-every model family and the pipeline stage fn.
+every model family and the pipeline stage fn — plus the communication-path
+knobs (``qcomm``/``node``/``overlap``, carried as a
+:class:`repro.core.commplan.CommPlan` and executed by
+``runtime/qcollect.py``): int8 block-quantized zero=3 weight gathers,
+two-phase intra/inter-node collectives over the 4D
+``("node", "pipe", "data", "model")`` mesh, and per-chunk gather/compute
+overlap through the StageProgram scan.
 
 The memory axis is pure shardings (see ``core/memplan.py`` for the stage
 semantics): stage >= 1 puts Adam's moments on the data axis, stage >= 2
@@ -49,6 +56,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import commplan as cpl
 from repro.core import memplan as mpl
 from repro.core import precision as prec
 from repro.core import sharding as shd
@@ -57,6 +65,7 @@ from repro.core.memplan import MemoryPlan
 from repro.models.common import ModelConfig
 from repro.models.model import Model
 from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.runtime import qcollect as qc
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,40 +78,57 @@ class ParallelPlan:
                                     # (pp*v logical stages; see pipeline_spmd)
     rules: str = "megatron_tp"      # sharding strategy preset
     zero: int | None = None         # ZeRO stage 0|1|2|3 (core/memplan.py);
-                                    # None -> derive from zero1 (default: 1)
-    zero1: bool | None = None       # DEPRECATED alias: True -> zero=1,
-                                    # False -> zero=0; normalized to
-                                    # (zero >= 1) after resolution — on an
-                                    # existing plan override via zero=, the
-                                    # stage, not this bool
+                                    # None -> default stage 1
+    zero1: Any = None               # REMOVED alias — passing anything but
+                                    # None raises, naming zero= (the field
+                                    # survives only so dataclasses.replace
+                                    # keeps working on stored plans)
+    node: int = 1                   # hierarchical ways ("node" mesh axis);
+                                    # > 1 selects the 4D mesh + two-phase
+                                    # intra/inter-node ZeRO collectives
+    qcomm: str = "none"             # none | gather | both — int8 block-
+                                    # quantized zero=3 collectives
+    overlap: bool = False           # interleave per-chunk weight gathers
+                                    # with the StageProgram scan (pp == 1)
+    comm_block: int = 32            # quantization block (core/commplan.py)
     gas: int = 1                    # gradient accumulation steps
                                     # (== pipeline microbatches when pp > 1)
     precision: str = "bf16"         # bf16 | fp16 | fp32
     remat: str = "full"             # activation checkpointing:
                                     # full | selective | none (core/compute.py)
     kernels: bool = False           # fused Pallas fast path (norm/MLP/attn/CE)
+    multi_segment: bool = False     # hybrid pp>1: lower the alternating
+                                    # pattern as an explicit two-segment-kind
+                                    # [mamba_i, shared]*n sequence instead of
+                                    # one fused "super" segment
     data_axis: str = "data"
     model_axis: str = "model"
     pipe_axis: str = "pipe"
+    node_axis: str = "node"
     extra_dp_axes: tuple[str, ...] = ()   # e.g. ("pod",) in multi-pod mode
     # hillclimbing hook: ((logical_axis, mesh_axis|None), ...) rule overrides
     rule_overrides: tuple = ()
 
     def __post_init__(self):
-        for name in ("dp", "tp", "pp", "virtual_stages", "gas"):
+        for name in ("dp", "tp", "pp", "virtual_stages", "gas", "node"):
             if getattr(self, name) < 1:
                 raise ValueError(f"{name} must be >= 1, got {getattr(self, name)}")
-        # resolve the (zero, deprecated zero1) pair: zero wins when set, so
-        # dataclasses.replace(plan, zero=...) always takes effect; zero1 is
-        # normalized to the derived bool for existing readers
-        stage = mpl.resolve_stage(self.zero, self.zero1)
+        stage = mpl.resolve_stage(self.zero, self.zero1)  # raises on zero1=
         object.__setattr__(self, "zero", stage)
-        object.__setattr__(self, "zero1", stage >= 1)
         self.compute_policy()  # validates remat
+        self.comm_plan()       # validates qcomm/comm_block/node
+        if (self.qcomm != "none" or self.overlap) and stage != 3:
+            raise ValueError(
+                f"qcomm={self.qcomm!r}/overlap={self.overlap} act on the "
+                f"zero=3 weight gathers; this plan has zero={stage}")
+        if self.overlap and self.pp > 1:
+            raise ValueError(
+                "overlap interleaves gathers with the pp==1 StageProgram "
+                "scan; pp > 1 already gathers per stage")
 
     @property
     def n_devices(self) -> int:
-        return self.dp * self.tp * self.pp
+        return self.node * self.dp * self.tp * self.pp
 
     @property
     def n_stages(self) -> int:
@@ -115,18 +141,33 @@ class ParallelPlan:
 
     def memory_plan(self) -> MemoryPlan:
         """The memory-axis policy (ZeRO stage) this plan carries."""
-        return MemoryPlan(zero=self.zero, data_axis=self.data_axis)
+        return MemoryPlan(zero=self.zero, data_axis=self.data_axis,
+                          node_axis=self.node_axis if self.node > 1 else None)
+
+    def comm_plan(self) -> cpl.CommPlan:
+        """The communication-axis policy this plan carries."""
+        return cpl.CommPlan(qcomm=self.qcomm, block=self.comm_block,
+                            overlap=self.overlap, node=self.node,
+                            node_axis=self.node_axis,
+                            data_axis=self.data_axis)
 
     def sharding_rules(self) -> shd.ShardingRules:
         preset = shd.PRESETS[self.rules]
         rules = preset(data_axis=self.data_axis,
                        model_axis=self.model_axis,
                        pipe_axis=self.pipe_axis if self.pp > 1 else None)
-        if self.extra_dp_axes:
-            batch_axes = tuple(self.extra_dp_axes) + (self.data_axis,)
+        # the batch rides every DP-flavored axis, slowest first: extra pod
+        # axes, then the hierarchical node axis, then data — node-major
+        # order matches the flat dp = node*dp device order, so hierarchical
+        # plans reproduce the flat plan's trajectory exactly
+        batch_axes = tuple(self.extra_dp_axes)
+        if self.node > 1:
+            batch_axes += (self.node_axis,)
+        if batch_axes:
+            batch_axes += (self.data_axis,)
             rules = rules.with_overrides(
                 batch=batch_axes, cache_batch=batch_axes,
-                name=rules.name + "+pod_dp")
+                name=rules.name + "+hier_dp")
         if self.rule_overrides:
             rules = rules.with_overrides(**dict(self.rule_overrides))
         return rules
@@ -244,11 +285,25 @@ def build_train_step(model: Model, opt_cfg: AdamWConfig, plan: ParallelPlan,
             f"model carries compute policy {model.compute} but the plan "
             f"specifies {compute}; the plan wins inside the executor — set "
             f"remat/kernels on the ParallelPlan instead", stacklevel=2)
-    model = Model(model.cfg, policy.compute_dtype, model.q_chunk,
-                  compute=compute)
     if plan.pp > 1 and mesh is None:
         raise ValueError("pp > 1 requires the mesh at build time "
                          "(pipeline sharding constraints)")
+
+    # CommPlan executor (runtime/qcollect.py): int8 round-trips the zero=3
+    # weight gathers and/or hands the model a LayerComm for per-chunk
+    # gather/compute overlap.  qcomm=none + overlap=False costs nothing —
+    # no CommExec, the step below is byte-identical to before.
+    cp = plan.comm_plan()
+    comm_exec = None
+    if cp.quantizes or cp.overlap:
+        if mesh is None:
+            raise ValueError("qcomm/overlap require the mesh at build time "
+                             "(the comm executor binds sharding specs)")
+        _pshapes, _psh, _, _ = plan_state_shardings(model, mesh, plan)
+        comm_exec = qc.CommExec(cp, mesh, _pshapes, _psh)
+    model = Model(model.cfg, policy.compute_dtype, model.q_chunk,
+                  compute=compute,
+                  comm=comm_exec.layer_comm if comm_exec else None)
     # pp > 1 folds all gas microbatches into one pipelined backward pass
     outer_gas = 1 if plan.pp > 1 else plan.gas
 
@@ -267,11 +322,14 @@ def build_train_step(model: Model, opt_cfg: AdamWConfig, plan: ParallelPlan,
         constrain_gsum = lambda t: t
 
     def loss_fn(params, micro_batch, scale):
+        if comm_exec is not None:
+            params = comm_exec.prepare(params)
         if plan.pp > 1:
             loss, metrics = model.loss_pipelined(
                 params, micro_batch, mesh=mesh, pp=plan.pp,
                 n_micro=plan.gas, virtual_stages=plan.virtual_stages,
-                pipe_axis=plan.pipe_axis, data_axis=plan.data_axis)
+                pipe_axis=plan.pipe_axis, data_axis=plan.data_axis,
+                multi_segment=plan.multi_segment)
         else:
             loss, metrics = model.loss(params, micro_batch)
         return prec.scale_loss({"scale": scale}, loss), metrics

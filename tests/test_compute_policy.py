@@ -136,10 +136,10 @@ def _run_losses(plan, n_steps=3, cfg=None):
 def test_remat_policies_identical_loss_trajectory_pp1():
     from repro.runtime.train_loop import ParallelPlan
 
-    ref_losses = _run_losses(ParallelPlan(precision="fp32", zero1=False))
+    ref_losses = _run_losses(ParallelPlan(precision="fp32", zero=0))
     for remat in ("selective", "none"):
         losses = _run_losses(
-            ParallelPlan(precision="fp32", zero1=False, remat=remat))
+            ParallelPlan(precision="fp32", zero=0, remat=remat))
         np.testing.assert_allclose(losses, ref_losses, rtol=1e-6, atol=1e-6)
 
 
@@ -170,7 +170,7 @@ def run(plan, mesh):
         out.append(float(m["loss"]))
     return out
 
-ref = run(ParallelPlan(gas=1, precision="fp32", zero1=False, rules="dp_only"),
+ref = run(ParallelPlan(gas=1, precision="fp32", zero=0, rules="dp_only"),
           single_device_mesh())
 for remat in ("full", "selective", "none"):
     plan = ParallelPlan(dp=2, tp=1, pp=2, gas=2, precision="fp32",
@@ -198,10 +198,10 @@ def test_kernels_plan_trains_dense_config_to_fp32_tolerance(arch):
     from repro.runtime.train_loop import ParallelPlan
 
     cfg = get_config(arch).reduced(n_layers=2, vocab_size=256)
-    ref_losses = _run_losses(ParallelPlan(precision="fp32", zero1=False),
+    ref_losses = _run_losses(ParallelPlan(precision="fp32", zero=0),
                              n_steps=2, cfg=cfg)
     k_losses = _run_losses(
-        ParallelPlan(precision="fp32", zero1=False, kernels=True),
+        ParallelPlan(precision="fp32", zero=0, kernels=True),
         n_steps=2, cfg=cfg)
     np.testing.assert_allclose(k_losses, ref_losses, rtol=1e-4, atol=1e-4)
 
@@ -252,7 +252,7 @@ def test_compute_policy_checkpoint_modes():
 
 
 def test_trial_plan_carries_compute_policy():
-    plan = hpo.trial_plan({"pp": 2, "tp": 4, "gas": 5, "zero1": 1,
+    plan = hpo.trial_plan({"pp": 2, "tp": 4, "gas": 5, "zero": 1,
                            "nnodes": 16, "remat": "selective", "kernels": 1})
     assert plan.remat == "selective" and plan.kernels is True
     # defaults: seed-equivalent compute path

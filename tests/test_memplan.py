@@ -107,32 +107,26 @@ def test_zero_divisors_and_table2_accounting():
     assert abs(b3["total"] - b0["total"] / 8) < 1e-12
 
 
-def test_plan_zero_alias_and_replace_semantics():
+def test_plan_zero_alias_removed_and_replace_semantics():
     from repro.runtime.train_loop import ParallelPlan
 
     p = ParallelPlan()
-    assert p.zero == 1 and p.zero1 is True          # paper-baseline default
-    with pytest.warns(DeprecationWarning):
-        p0 = ParallelPlan(zero1=False)
-    assert p0.zero == 0 and p0.zero1 is False
-    with pytest.warns(DeprecationWarning):
-        assert ParallelPlan(zero1=True).zero == 1
-    # zero= wins on replace, even against the normalized stale alias, and
-    # the sanctioned path stays silent in BOTH directions (upgrading a
-    # zero=0 plan must not warn — replace passes the stale alias back)
+    assert p.zero == 1                              # paper-baseline default
+    # the removed zero1 alias is a hard error that names the replacement
+    with pytest.raises(ValueError, match="zero="):
+        ParallelPlan(zero1=False)
+    with pytest.raises(ValueError, match="zero="):
+        ParallelPlan(zero1=True)
+    # replace moves through the stage ladder silently in both directions
     import warnings as _warnings
     with _warnings.catch_warnings():
         _warnings.simplefilter("error")
         p2 = dataclasses.replace(p, zero=2)
-        assert p2.zero == 2 and p2.zero1 is True
+        assert p2.zero == 2
         p00 = dataclasses.replace(p2, zero=0)
-        assert p00.zero == 0 and p00.zero1 is False
+        assert p00.zero == 0
         p03 = dataclasses.replace(p00, zero=3)   # upgrade from stage 0
-        assert p03.zero == 3 and p03.zero1 is True
-    # corollary (documented): replace(plan, zero1=...) cannot override a
-    # resolved zero — the stage must be changed via zero=
-    pz = dataclasses.replace(p, zero1=False)
-    assert pz.zero == 1 and pz.zero1 is True
+        assert p03.zero == 3
     with pytest.raises(ValueError):
         ParallelPlan(zero=4)
     assert p2.memory_plan() == memplan.MemoryPlan(zero=2, data_axis="data")
@@ -145,10 +139,10 @@ def test_hpo_space_carries_zero_stage():
     assert zax.values == (0, 1, 2, 3)
     plan = hpo.trial_plan({"pp": 2, "tp": 4, "gas": 5, "zero": 3,
                            "nnodes": 16})
-    assert plan.zero == 3 and plan.zero1 is True
-    # legacy configs with the binary bit still concretize
-    legacy = hpo.trial_plan({"pp": 2, "tp": 4, "zero1": 0, "nnodes": 16})
-    assert legacy.zero == 0 and legacy.zero1 is False
+    assert plan.zero == 3
+    # the legacy binary-bit key is a hard error, not a silent shim
+    with pytest.raises(ValueError, match="zero="):
+        hpo.trial_plan({"pp": 2, "tp": 4, "zero1": 0, "nnodes": 16})
 
 
 def test_costmodel_stage_memory_and_comm_terms():
@@ -165,8 +159,16 @@ def test_costmodel_stage_memory_and_comm_terms():
             < preds[1].memory_per_gpu < preds[0].memory_per_gpu)
     # stage 3 pays the weight all-gather on top of the gradient reduction
     assert preds[3].breakdown["t_dp"] > preds[1].breakdown["t_dp"]
-    # the legacy zero1 alias reproduces stages 0/1 exactly
-    assert (cm.predict(cm.GPT_22B, cm.ParallelCfg(zero1=True, **base))
-            .memory_per_gpu == preds[1].memory_per_gpu)
-    assert (cm.predict(cm.GPT_22B, cm.ParallelCfg(zero1=False, **base))
-            .memory_per_gpu == preds[0].memory_per_gpu)
+    # the legacy zero1 alias is gone from the cost model's config too
+    with pytest.raises(TypeError):
+        cm.ParallelCfg(zero1=True, **base)
+    # CommPlan terms: quantized gathers and the hierarchical two-phase
+    # split both shrink t_dp at stage 3; overlap hides the rest
+    q = cm.predict(cm.GPT_22B, cm.ParallelCfg(zero=3, qcomm="gather", **base))
+    assert q.breakdown["t_dp"] < preds[3].breakdown["t_dp"]
+    # same 32 devices as preds[3] (dp=8): node=2 x dp=4 hierarchical
+    hier = cm.predict(cm.GPT_22B,
+                      cm.ParallelCfg(zero=3, node=2, **dict(base, dp=4)))
+    assert hier.breakdown["t_dp"] < preds[3].breakdown["t_dp"]
+    ov = cm.predict(cm.GPT_22B, cm.ParallelCfg(zero=3, overlap=True, **base))
+    assert ov.breakdown["t_dp"] <= preds[3].breakdown["t_dp"]

@@ -23,11 +23,11 @@ for _ in range(3):
 
 results = {}
 for label, (dp, tp), plan in [
-    ("ref",   (1, 1), TrainPlan(gas=1, precision="fp32", zero1=False, rules="dp_only")),
-    ("tp4",   (2, 4), TrainPlan(gas=1, precision="fp32", zero1=False)),
-    ("zero1", (8, 1), TrainPlan(gas=1, precision="fp32", zero1=True)),
-    ("fsdp",  (8, 1), TrainPlan(gas=2, precision="fp32", zero1=True, rules="fsdp")),
-    ("gas4",  (2, 4), TrainPlan(gas=4, precision="fp32", zero1=True)),
+    ("ref",   (1, 1), TrainPlan(gas=1, precision="fp32", zero=0, rules="dp_only")),
+    ("tp4",   (2, 4), TrainPlan(gas=1, precision="fp32", zero=0)),
+    ("zero1", (8, 1), TrainPlan(gas=1, precision="fp32", zero=1)),
+    ("fsdp",  (8, 1), TrainPlan(gas=2, precision="fp32", zero=1, rules="fsdp")),
+    ("gas4",  (2, 4), TrainPlan(gas=4, precision="fp32", zero=1)),
 ]:
     mesh = make_mesh_2d(dp, tp)
     state = init_train_state(model, jax.random.PRNGKey(0), opt, plan)

@@ -34,11 +34,11 @@ def run(plan, mesh):
     return losses, jax.device_get(state["params"]["embed"]), state
 
 ref_losses, ref_embed, _ = run(
-    ParallelPlan(gas=1, precision="fp32", zero1=False, rules="dp_only"),
+    ParallelPlan(gas=1, precision="fp32", zero=0, rules="dp_only"),
     single_device_mesh())
 
 # the acceptance-criteria plan: pp=2 with dp=2 ZeRO-1 and gas=2 microbatches
-plan = ParallelPlan(dp=2, tp=1, pp=2, gas=2, precision="fp32", zero1=True)
+plan = ParallelPlan(dp=2, tp=1, pp=2, gas=2, precision="fp32", zero=1)
 mesh = mesh_for_plan(plan)
 assert set(mesh.axis_names) == {"pipe", "data", "model"}
 pp_losses, pp_embed, pp_state = run(plan, mesh)
@@ -111,7 +111,7 @@ def run(plan, mesh):
 # full 3D point: pp=2 x dp=2 x tp=2 on 8 devices, megatron TP + ZeRO-1
 losses = run(ParallelPlan(dp=2, tp=2, pp=2, gas=4, precision="fp32"),
              mesh_for_plan(ParallelPlan(dp=2, tp=2, pp=2)))
-ref = run(ParallelPlan(gas=1, precision="fp32", zero1=False, rules="dp_only"),
+ref = run(ParallelPlan(gas=1, precision="fp32", zero=0, rules="dp_only"),
           single_device_mesh())
 np.testing.assert_allclose(losses, ref, rtol=1e-5, atol=1e-4)
 print("TP_PP_OK")
@@ -125,10 +125,10 @@ def test_parallel_plan_3d_tp_pp(multidev):
 
 def test_trial_plan_bridges_search_space_to_real_plans():
     plan = hpo.trial_plan({"pp": 4, "tp": 8, "mbs": 8, "gas": 10,
-                           "zero1": 1, "nnodes": 16})
+                           "zero": 1, "nnodes": 16})
     assert plan is not None
     assert (plan.pp, plan.tp, plan.dp) == (4, 8, 4)  # 16*8 / (4*8) = 4
-    assert plan.gas == 10 and plan.zero1 is True
+    assert plan.gas == 10 and plan.zero == 1
     assert plan.n_devices == 16 * 8
 
     # untileable config -> None (penalized as the paper's F-objective failure)
@@ -143,7 +143,7 @@ def test_plan_objective_penalizes_untileable():
         return 40.0
 
     obj = hpo.plan_objective(score)
-    assert obj({"pp": 2, "tp": 4, "gas": 5, "zero1": 0, "nnodes": 16}) == 40.0
+    assert obj({"pp": 2, "tp": 4, "gas": 5, "zero": 0, "nnodes": 16}) == 40.0
     assert obj({"pp": 12, "tp": 8, "nnodes": 16}) == -1.0
     assert len(seen) == 1 and seen[0].pp == 2
 

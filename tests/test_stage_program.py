@@ -57,7 +57,7 @@ for fam, (arch, kw) in CASES.items():
         return out
 
     # same gas on both sides: per-microbatch MoE routing/aux must match
-    ref = run(ParallelPlan(gas=2, precision="fp32", zero1=False,
+    ref = run(ParallelPlan(gas=2, precision="fp32", zero=0,
                            rules="dp_only"), single_device_mesh())
     plan = ParallelPlan(dp=2, tp=1, pp=2, gas=2, precision="fp32")
     pp = run(plan, mesh_for_plan(plan))
@@ -110,7 +110,7 @@ def run(plan, mesh):
         out.append(float(m["loss"]))
     return out
 
-ref = run(ParallelPlan(gas=2, precision="fp32", zero1=False, rules="dp_only"),
+ref = run(ParallelPlan(gas=2, precision="fp32", zero=0, rules="dp_only"),
           single_device_mesh())
 vplan = ParallelPlan(dp=2, tp=1, pp=2, virtual_stages=2, gas=2, precision="fp32")
 vv = run(vplan, mesh_for_plan(vplan))
