@@ -13,10 +13,14 @@
 #   make bench-comm - CommPlan (qcomm x hierarchy x overlap) matrix at
 #                 zero=3 on 8 virtual devices, with measured-vs-predicted
 #                 collective bytes; writes + validates BENCH_comm.json
+#   make bench-moe - ExpertPlan (ep x kernels x plan) matrix on 8 virtual
+#                 devices, with measured-vs-predicted token all-to-all
+#                 bytes + router drop fractions; writes + validates
+#                 BENCH_moe.json
 
 PY := python
 
-.PHONY: test lint smoke bench bench-pp bench-comm
+.PHONY: test lint smoke bench bench-pp bench-comm bench-moe
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -47,3 +51,9 @@ bench-comm:
 	    --out BENCH_comm.json
 	PYTHONPATH=src $(PY) benchmarks/bench_comm.py \
 	    --validate BENCH_comm.json
+
+bench-moe:
+	PYTHONPATH=src $(PY) benchmarks/bench_moe.py --devices 8 \
+	    --out BENCH_moe.json
+	PYTHONPATH=src $(PY) benchmarks/bench_moe.py \
+	    --validate BENCH_moe.json

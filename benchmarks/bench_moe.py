@@ -1,0 +1,251 @@
+"""bench_moe: wall-time + all-to-all-byte matrix for the ExpertPlan axis —
+(ep x kernels x plan) on smoke-sized MoE configs over 8 virtual devices.
+Every point keeps dp * ep = 4 data ways (x tp=2 or pp=2), so routing sees
+the same (G, g, E, C) geometry and fp32 loss trajectories must agree with
+the flat dp=4 reference exactly.
+
+Each ep > 1 point records the token-dispatch byte pair:
+
+  * ``measured``  — ``analysis/hlo.py:comm_bytes`` ("all-to-all") on a
+    *loop-free* lowering of just the dispatch + combine sharding
+    constraints (the train step's layer scan hides per-iteration
+    collectives from a flat text count; pass the **compiled** module —
+    unoptimized StableHLO has no collectives);
+  * ``predicted`` — ``core/costmodel.py:predict_a2a_bytes`` (the
+    ExpertPlan analytic model), the acceptance bound: must agree with
+    ``measured`` within 10%.  On the forward-only dispatch lowering the
+    prediction is exact (2 reshards of global/(dp*ep) bytes each).
+
+Each point also records the router drop pair next to each other:
+``moe_drop_measured`` (the live train metric — capacity truncation of the
+real router, plan-invariant by construction) and ``moe_drop_predicted``
+(``expertplan.predicted_drop_fraction``'s binomial-overflow normal
+approximation, which assumes uniform gates — recorded for calibration,
+not asserted close).
+
+  PYTHONPATH=src python benchmarks/bench_moe.py --devices 8 --out BENCH_moe.json
+  make bench-moe
+
+Schema:
+
+  {"config": {seq_len, global_batch, steps, devices, backend,
+              kernels_interpret_mode, precision},
+   "points": [{"family": str, "arch": str, "label": str,
+               "plan": {dp, ep, tp, pp, zero, gas, kernels},
+               "compile_s": float, "wall_s_per_step": float,
+               "tokens_per_s": float, "losses": [float, ...],
+               "moe_drop_measured": float, "moe_drop_predicted": float,
+               "a2a_bytes": {"measured": int, "predicted": int}}, ...]}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+FP_TOL = 1e-4          # fp collectives: exact trajectory (allclose)
+KERNEL_TOL = 1e-3      # Pallas grouped kernel: fp32-accum, tiny reassoc drift
+PRED_TOL = 0.10        # costmodel-vs-measured acceptance bound
+DROP_INV_TOL = 1e-6    # measured drop is plan-invariant (same routing)
+
+FAMILY_CASES = {
+    # top-1 + shared expert (llama4 flavour), top-2 + dense residual (arctic)
+    "moe": ("llama4-maverick-400b-a17b", dict(n_layers=4)),
+    "moe_residual": ("arctic-480b", dict(n_layers=4)),
+}
+
+# label -> plan kwargs on top of (gas=2, fp32); dp * ep = 4 data ways
+# everywhere so the routing geometry (and hence the trajectory) is shared
+MATRIX = {
+    "ep2": dict(dp=2, ep=2, tp=2),
+    "ep2-kernels": dict(dp=2, ep=2, tp=2, kernels=True),
+    "ep2-pp2": dict(dp=2, ep=2, tp=1, pp=2),
+    "ep4-zero3": dict(dp=1, ep=4, tp=2, zero=3),
+}
+
+
+def validate(path: str) -> None:
+    with open(path) as f:
+        rec = json.load(f)
+    assert {"config", "points"} <= set(rec), path
+    cfg = rec["config"]
+    assert {"devices", "backend", "kernels_interpret_mode"} <= set(cfg), cfg
+    assert cfg["kernels_interpret_mode"] == (cfg["backend"] == "cpu"), cfg
+    by_fam: dict = {}
+    for p in rec["points"]:
+        assert {"family", "plan", "losses", "wall_s_per_step",
+                "moe_drop_measured", "moe_drop_predicted"} <= set(p), p
+        by_fam.setdefault(p["family"], {})[p["label"]] = p
+    for fam, pts in by_fam.items():
+        assert "ref" in pts and "ep2" in pts, (fam, sorted(pts))
+        ref = pts["ref"]
+        for label, p in pts.items():
+            tol = KERNEL_TOL if p["plan"].get("kernels") else FP_TOL
+            drift = max(abs(a - b) for a, b in zip(p["losses"], ref["losses"]))
+            assert drift <= tol, (
+                f"{fam} {label}: fp trajectory drifts {drift:.2e}")
+            # capacity truncation is measured, in [0, 1], and identical
+            # across layouts (the routing is plan-independent by design)
+            assert 0.0 <= p["moe_drop_measured"] <= 1.0, (fam, label, p)
+            assert 0.0 <= p["moe_drop_predicted"] <= 1.0, (fam, label, p)
+            assert (abs(p["moe_drop_measured"] - ref["moe_drop_measured"])
+                    <= DROP_INV_TOL), (
+                f"{fam} {label}: measured drop {p['moe_drop_measured']} != "
+                f"ref {ref['moe_drop_measured']} — routing is plan-dependent")
+            ab = p.get("a2a_bytes")
+            if p["plan"].get("ep", 1) > 1:
+                assert ab is not None and ab["predicted"] > 0, (fam, label)
+                err = abs(ab["measured"] - ab["predicted"]) / ab["predicted"]
+                assert err <= PRED_TOL, (
+                    f"{fam} {label}: predicted {ab['predicted']} vs "
+                    f"measured {ab['measured']} ({err:.1%})")
+    print(f"{path}: schema + ep-matrix equivalence OK "
+          f"({len(rec['points'])} points)")
+
+
+def run_bench(args) -> dict:
+    import time
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.analysis import hlo
+    from repro.configs import get_config
+    from repro.core import costmodel as cm
+    from repro.core import expertplan as epl
+    from repro.data import SyntheticCorpus, make_batch_iterator
+    from repro.launch.mesh import mesh_for_plan
+    from repro.models import moe
+    from repro.models.model import Model
+    from repro.optim import AdamWConfig
+    from repro.runtime.train_loop import (ParallelPlan, init_train_state,
+                                          jit_train_step)
+
+    n_dev = jax.device_count()
+    assert n_dev >= 8, "bench-moe needs 8 devices (use --devices 8)"
+
+    def a2a_bytes(cfg, plan):
+        """Measured vs predicted bytes for one dispatch + combine of the
+        plan's (G, E, C, d) slot tensor (loop-free lowering of just the
+        two ExpertDispatch constraints; see module docstring)."""
+        mesh = mesh_for_plan(plan)
+        G, g = moe.group_shape(args.global_batch, args.seq_len)
+        C = moe.moe_capacity(g, cfg)
+        E, d = cfg.n_experts, cfg.d_model
+        disp = moe.ExpertDispatch(mesh=mesh, expert_axis=plan.expert_axis,
+                                  group_axes=(plan.data_axis,))
+        insh = NamedSharding(
+            mesh, P((plan.data_axis, plan.expert_axis), None, None, None))
+
+        def f(x):
+            return disp.combine(disp.dispatch(x) * 2.0)
+
+        sds = jax.ShapeDtypeStruct((G, E, C, d), jnp.float32)
+        txt = (jax.jit(f, in_shardings=(insh,), out_shardings=insh)
+               .lower(sds).compile().as_text())
+        measured = hlo.comm_bytes(txt).get("all-to-all", 0)
+        pred = cm.predict_a2a_bytes(G, E, C, d, dp=plan.dp, ep=plan.ep,
+                                    node=plan.node, itemsize=4)
+        return {"measured": int(measured), "predicted": int(pred)}
+
+    points = []
+    for fam, (arch, kw) in FAMILY_CASES.items():
+        cfg = get_config(arch).reduced(
+            ep=4, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+            vocab_size=256, head_dim=32, **kw)
+        model = Model(cfg, jnp.float32)
+        opt = AdamWConfig(lr=1e-3)
+        it = make_batch_iterator(
+            SyntheticCorpus(vocab_size=cfg.vocab_size), seq_len=args.seq_len,
+            global_batch=args.global_batch, prefetch=0)
+        batches = [next(it) for _ in range(args.steps + 1)]
+        _, g = moe.group_shape(args.global_batch, args.seq_len)
+        drop_pred = epl.predicted_drop_fraction(
+            cfg.top_k, cfg.n_experts, cfg.capacity_factor, g)
+
+        cases = [("ref", ParallelPlan(dp=4, tp=2, gas=2, precision="fp32",
+                                      zero=0))]
+        for label, pkw in MATRIX.items():
+            cases.append((label, ParallelPlan(gas=2, precision="fp32",
+                                              **pkw)))
+
+        for label, plan in cases:
+            mesh = mesh_for_plan(plan)
+            state = init_train_state(model, jax.random.PRNGKey(0), opt, plan)
+            step = jit_train_step(model, opt, plan, mesh,
+                                  args.global_batch, args.seq_len)
+            t0 = time.perf_counter()
+            state, m = step(state, batches[0])
+            jax.block_until_ready(state)
+            compile_s = time.perf_counter() - t0
+            losses, walls = [float(m["loss"])], []
+            drop_meas = float(m["moe_drop"])
+            for b in batches[1:]:
+                t0 = time.perf_counter()
+                state, m = step(state, b)
+                jax.block_until_ready(state)
+                walls.append(time.perf_counter() - t0)
+                losses.append(float(m["loss"]))
+            wall = float(np.min(walls))
+            rec = {
+                "family": fam, "arch": cfg.name, "label": label,
+                "plan": {"dp": plan.dp, "ep": plan.ep, "tp": plan.tp,
+                         "pp": plan.pp, "zero": plan.zero, "gas": plan.gas,
+                         "kernels": plan.kernels},
+                "compile_s": round(compile_s, 3),
+                "wall_s_per_step": round(wall, 5),
+                "tokens_per_s": round(
+                    args.global_batch * args.seq_len / wall, 1),
+                "losses": losses,
+                "moe_drop_measured": drop_meas,
+                "moe_drop_predicted": drop_pred,
+            }
+            if plan.ep > 1:
+                rec["a2a_bytes"] = a2a_bytes(cfg, plan)
+            points.append(rec)
+            ab = rec.get("a2a_bytes")
+            extra = (f" a2a {ab['measured']:>8d}B "
+                     f"(pred {ab['predicted']})" if ab else "")
+            print(f"{fam:12s} {label:12s} | {wall*1e3:8.2f} ms/step "
+                  f"(compile {compile_s:.1f}s) loss0 {losses[0]:.5f} "
+                  f"drop {drop_meas:.4f}{extra}")
+
+    backend = jax.default_backend()
+    return {
+        "config": {"seq_len": args.seq_len,
+                   "global_batch": args.global_batch, "steps": args.steps,
+                   "devices": n_dev, "backend": backend,
+                   "precision": "fp32",
+                   "kernels_interpret_mode": backend == "cpu"},
+        "points": points,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--devices", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_moe.json")
+    ap.add_argument("--validate", metavar="PATH", default=None)
+    args = ap.parse_args()
+
+    if args.validate:
+        validate(args.validate)
+        return
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+    rec = run_bench(args)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"wrote {args.out} ({len(rec['points'])} points)")
+    validate(args.out)
+
+
+if __name__ == "__main__":
+    main()

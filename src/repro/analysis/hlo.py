@@ -60,9 +60,10 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
 _RESULT_RE = re.compile(
     r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s)]*)\s+([a-z0-9-]+)\(")
 
-# ops with a well-defined wire payload (the CommPlan byte-accounting set)
+# ops with a well-defined wire payload (the CommPlan/ExpertPlan
+# byte-accounting set)
 PAYLOAD_OPS = ("all-gather", "reduce-scatter", "all-reduce",
-               "collective-permute")
+               "collective-permute", "all-to-all")
 
 
 def _as_text(lowered_or_text) -> str:
@@ -86,7 +87,10 @@ def comm_bytes(lowered_or_text) -> dict[str, int]:
     * ``reduce-scatter`` -> input bytes (the full tensor being reduced),
     * ``all-reduce``     -> 2x input bytes (ring = reduce-scatter +
       all-gather),
-    * ``collective-permute`` -> operand bytes.
+    * ``collective-permute`` -> operand bytes,
+    * ``all-to-all``     -> operand bytes (tuple form: the operands sum to
+      the per-device local tensor — what ``expertplan.dispatch_a2a_bytes``
+      predicts per EP reshard).
 
     Async ``-done`` halves are skipped (their ``-start`` carries the
     shapes).  Accepts HLO text, a jax ``Lowered``, or a ``Compiled`` — the

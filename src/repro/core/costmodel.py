@@ -28,6 +28,12 @@ bandwidth coefficients are refittable from measurements via
 :func:`calibrate_bandwidths`, and the predicted collective payloads are
 validated against ``analysis/hlo.py:comm_bytes`` via
 :func:`predict_comm_bytes`.
+
+ExpertPlan terms (core/expertplan.py): ``ep > 1`` bills the MoE token
+dispatch/combine all-to-all at the intra-node tier (``t_ep``, 4 reshards
+per layer per microbatch), prices the payload via :func:`predict_a2a_bytes`,
+and reports the router's predicted capacity-overflow drop fraction
+(``Prediction.moe_drop``).
 """
 from __future__ import annotations
 
@@ -37,7 +43,7 @@ from typing import Any, Mapping, Sequence
 
 import numpy as np
 
-from repro.core import commplan, memplan
+from repro.core import commplan, expertplan, memplan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,6 +147,11 @@ class ParallelCfg:
     comm_block: int = 32         # int8 quantization block size
     flash_attention: bool = True
     checkpoint_activations: bool = True
+    # --- ExpertPlan (core/expertplan.py): MoE expert parallelism ---
+    ep: int = 1                  # expert-parallel ways ("expert" mesh axis)
+    n_experts: int = 0           # 0 = dense model (no MoE terms billed)
+    top_k: int = 1               # routed experts per token
+    capacity_factor: float = 1.0  # slots per expert = cf * tokens*k/E
 
     @property
     def zero_stage(self) -> int:
@@ -154,12 +165,19 @@ class ParallelCfg:
                                  overlap=self.overlap, node=self.node)
 
     @property
+    def expert_plan(self) -> expertplan.ExpertPlan:
+        return expertplan.ExpertPlan(ep=self.ep)
+
+    @property
     def n_gpus(self) -> int:
-        return self.tp * self.pp * self.dp * self.node
+        return self.tp * self.pp * self.dp * self.ep * self.node
 
     @property
     def gbs(self) -> int:
-        return self.mbs * self.gas * self.dp * self.node
+        # the "expert" axis carries batch groups too (batch is sharded over
+        # (data, expert) under ep > 1 — runtime/train_loop.py), so ep
+        # multiplies the data ways like dp and node do
+        return self.mbs * self.gas * self.dp * self.ep * self.node
 
 
 @dataclasses.dataclass
@@ -174,6 +192,10 @@ class Prediction:
     # per-class state bytes (params/grads/opt/act) — Table II's structure,
     # divided per the ZeRO stage (core/memplan.py:zero_divisors)
     mem_breakdown: dict[str, float] = dataclasses.field(default_factory=dict)
+    # predicted router capacity-overflow drop fraction (ExpertPlan's normal
+    # approximation; 0.0 for dense models) — validated against the measured
+    # ``moe_drop`` train metric in benchmarks/bench_moe.py
+    moe_drop: float = 0.0
 
     @property
     def objective(self) -> float:
@@ -218,6 +240,27 @@ def predict(model: GPTSize, cfg: ParallelCfg, machine: Machine = FRONTIER) -> Pr
         t_tp = 4.0 * layers_per_stage * ar_time        # 2 fwd + 2 bwd per layer
     else:
         t_tp = 0.0
+
+    # ---------------- EP token all-to-all ----------------
+    # ExpertPlan: dispatch + combine reshard per MoE layer, forward and
+    # backward (4 reshards/layer/microbatch), each moving the local
+    # capacity-C slot tensor's (ep-1)/ep off-shard fraction over the
+    # intra-node fabric tier (EP groups are packed within a node, like TP)
+    e = cfg.ep
+    if e > 1 and cfg.n_experts > 0:
+        expertplan.validate_experts(cfg.n_experts, e,
+                                    where=f"ParallelCfg(ep={e})")
+        # local slot tensor per microbatch per layer: mbs*s tokens, top_k
+        # slots each, capacity-factor headroom, d wide, bf16 wire
+        a2a_vol = cfg.capacity_factor * mbs * s * cfg.top_k * d * 2.0
+        t_ep = 4.0 * layers_per_stage * (e - 1) / e * a2a_vol / machine.intranode_bw
+        moe_drop = expertplan.predicted_drop_fraction(
+            cfg.top_k, cfg.n_experts, cfg.capacity_factor, mbs * s)
+    else:
+        t_ep = 0.0
+        moe_drop = (expertplan.predicted_drop_fraction(
+            cfg.top_k, cfg.n_experts, cfg.capacity_factor, mbs * s)
+            if cfg.n_experts > 0 else 0.0)
 
     # ---------------- PP point-to-point ----------------
     if p > 1:
@@ -290,7 +333,7 @@ def predict(model: GPTSize, cfg: ParallelCfg, machine: Machine = FRONTIER) -> Pr
     # ---------------- optimizer ----------------
     t_opt = 14.0 * (N / (p * t)) / machine.hbm_bw       # streaming the state
 
-    micro = t_comp + t_attn_mem + t_tp + t_pp
+    micro = t_comp + t_attn_mem + t_tp + t_ep + t_pp
     ticks = m + p - 1
     T = ticks * micro + t_dp + t_opt
     bubble = (p - 1) / ticks if p > 1 else 0.0
@@ -327,9 +370,10 @@ def predict(model: GPTSize, cfg: ParallelCfg, machine: Machine = FRONTIER) -> Pr
         bubble=bubble,
         breakdown={
             "t_comp": ticks * t_comp, "t_attn_mem": ticks * t_attn_mem,
-            "t_tp": ticks * t_tp, "t_pp": ticks * t_pp,
+            "t_tp": ticks * t_tp, "t_ep": ticks * t_ep, "t_pp": ticks * t_pp,
             "t_dp": t_dp, "t_opt": t_opt,
         },
+        moe_drop=moe_drop,
         mem_breakdown={
             "params": mem_params, "grads": mem_grads, "opt": mem_opt,
             "act": mem_act, "zero": float(z),
@@ -362,6 +406,25 @@ def predict_comm_bytes(shapes: Sequence[Sequence[int]],
     return commplan.tree_gather_bytes(shapes, specs, mesh_shape, cp,
                                       itemsize=itemsize,
                                       multiplier=multiplier)
+
+
+def predict_a2a_bytes(n_groups: int, n_experts: int, capacity: int,
+                      d_model: int, *, dp: int = 1, ep: int = 1,
+                      node: int = 1, itemsize: int = 4,
+                      with_backward: bool = False) -> int:
+    """Predicted ExpertPlan token all-to-all payload bytes per MoE layer.
+
+    Thin bridge over :func:`repro.core.expertplan.dispatch_a2a_bytes` so the
+    bench/dryrun layers validate the analytic model against
+    ``analysis/hlo.py:comm_bytes`` measured on the *compiled* module (pass
+    ``lowered.compile()`` — unoptimized StableHLO has no collectives).  The
+    forward dispatch+combine prediction is exact on a loop-free lowering;
+    the backward adds autodiff-scheduled reshards and is validated only to
+    tolerance (see benchmarks/bench_moe.py).
+    """
+    return expertplan.dispatch_a2a_bytes(
+        n_groups, n_experts, capacity, d_model, dp=dp, ep=ep, node=node,
+        itemsize=itemsize, with_backward=with_backward)
 
 
 def calibrate_bandwidths(samples: Sequence[tuple[float, float, float]],

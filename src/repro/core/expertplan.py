@@ -1,0 +1,144 @@
+"""ExpertPlan: expert-parallelism semantics and analytic predictors.
+
+Pure numpy/python (no jax import) — the same split CommPlan uses: this
+module owns the *semantics* of the ``ep`` plan axis (divisibility rules,
+capacity math, all-to-all payload bytes, expected capacity-overflow drop
+fraction) while ``models/moe.py`` + ``runtime/train_loop.py`` own the jax
+execution.  Everything here is validated against measured numbers:
+``dispatch_a2a_bytes`` against ``analysis/hlo.py:comm_bytes`` on the real
+dispatch lowering (``tests/test_expertplan.py``, ``make bench-moe``), and
+``predicted_drop_fraction`` against the router's measured drop rate.
+
+Mesh/axis conventions (see launch/mesh.py): experts shard over a dedicated
+``"expert"`` axis between "data" and "model" — slowest-to-fastest the mesh
+is ("node",) ("pipe", "data", "expert", "model").  The token-group dim is
+sharded over the *composite* (extra_dp, "node", "data", "expert") batch
+axes, so EP plans keep the same per-device token count as the flat
+dp·ep plan and reproduce its fp32 loss trajectory exactly.  Dispatch is two
+pure GSPMD sharding constraints (group-major -> expert-major and back),
+which XLA lowers to the tuple-form all-to-all pair — no manual gathers
+inside jit (the XLA CPU SPMD re-stacking caveat, ROADMAP standing caveats).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+class ExpertDivisibilityError(ValueError):
+    """n_experts does not tile the requested expert-parallel degree."""
+
+
+def validate_experts(n_experts: int, ep: int, *, where: str = "plan") -> None:
+    """Raise :class:`ExpertDivisibilityError` unless ep divides n_experts."""
+    if ep > 1 and n_experts % ep != 0:
+        raise ExpertDivisibilityError(
+            f"{where}: n_experts={n_experts} is not divisible by ep={ep}; "
+            f"expert parallelism shards whole experts. Use "
+            f"round_experts({n_experts}, {ep}) = {round_experts(n_experts, ep)} "
+            f"or pick ep from the divisors of n_experts.")
+
+
+def round_experts(n_experts: int, ep: int) -> int:
+    """Nearest ep-divisible expert count (>= ep; ties round up).
+
+    Used by ``ModelConfig.reduced`` so scaled-down configs stay shardable:
+    clamping 128 experts to 4 must not strand an ep=8 plan.
+    """
+    if ep <= 1:
+        return n_experts
+    down = (n_experts // ep) * ep
+    up = down + ep
+    if down < ep:
+        return up
+    return up if (n_experts - down) >= (up - n_experts) else down
+
+
+def capacity(group_size: int, top_k: int, n_experts: int,
+             capacity_factor: float) -> int:
+    """Per-expert slot count C = max(ceil(cf * g * k / E), 1).
+
+    The single source of truth mirrored by ``moe.moe_capacity`` — the
+    cost-model, the kernel grid, and the dispatch reshape all derive from
+    the same C so predicted and measured payloads line up.
+    """
+    cap = int(math.ceil(capacity_factor * group_size * max(top_k, 1)
+                        / n_experts))
+    return max(cap, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertPlan:
+    """Semantics of one ``ParallelPlan(ep=...)`` configuration.
+
+    ``ep == 1`` is the replication fallback: no "expert" mesh axis exists,
+    ``sharding.partition_spec`` resolves the expert rules to replication,
+    and the dispatch constraints are no-ops — exactly the pre-EP executor.
+    """
+    ep: int = 1
+    expert_axis: str = "expert"
+    data_axis: str = "data"
+    node_axis: str = "node"
+
+    def __post_init__(self):
+        if self.ep < 1:
+            raise ValueError(f"ep must be >= 1, got {self.ep}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.ep > 1
+
+    def validate_model(self, n_experts: int) -> None:
+        validate_experts(n_experts, self.ep, where="ExpertPlan")
+
+    def experts_per_shard(self, n_experts: int) -> int:
+        self.validate_model(n_experts)
+        return n_experts // max(self.ep, 1)
+
+
+def dispatch_a2a_bytes(n_groups: int, n_experts: int, cap: int, d_model: int,
+                       *, dp: int = 1, ep: int = 1, node: int = 1,
+                       itemsize: int = 4, with_backward: bool = False) -> int:
+    """Per-device all-to-all payload bytes for one MoE block's dispatch.
+
+    The dispatched tensor is (G, E, C, d).  Forward does two reshards —
+    group-major P((..dp.., expert), None, None, None) -> expert-major
+    P((..dp..), expert, None, None) for dispatch, and the reverse for
+    combine — and XLA lowers each to one tuple-form all-to-all whose
+    operands sum to the *local* tensor: global_bytes / (dp * ep * node).
+    ``hlo.comm_bytes`` prices all-to-all at operand bytes, so this is the
+    number it reports per reshard.  The backward of a sharding constraint
+    is the reverse reshard, so grad doubles the count.
+    """
+    global_b = n_groups * n_experts * cap * d_model * itemsize
+    ways = max(dp * ep * node, 1)
+    per_reshard = global_b // ways
+    n_reshards = 4 if with_backward else 2
+    return (0 if ep <= 1 else per_reshard * n_reshards)
+
+
+def predicted_drop_fraction(top_k: int, n_experts: int,
+                            capacity_factor: float, group_size: int) -> float:
+    """Expected fraction of routed (token, k) assignments dropped to the
+    capacity limit, under uniform routing.
+
+    Per-expert load is ~Binomial(g*k, 1/E); with the normal approximation
+    the expected overflow past C is E[max(X - C, 0)] =
+    sigma*phi(z) - (C - mu)*(1 - Phi(z)) at z = (C - mu)/sigma.  Summed
+    over experts and normalized by g*k.  cf >= 1 with many tokens per
+    expert -> ~0; cf < 1 -> approaches 1 - cf.  Validated against the
+    router's measured drop rate in dryrun and ``BENCH_moe.json``.
+    """
+    g, k, E = group_size, max(top_k, 1), n_experts
+    C = capacity(g, k, E, capacity_factor)
+    n = g * k
+    mu = n / E
+    var = n * (1.0 / E) * (1.0 - 1.0 / E)
+    if var <= 0.0:
+        return max(0.0, (mu - C) / mu) if mu > 0 else 0.0
+    sigma = math.sqrt(var)
+    z = (C - mu) / sigma
+    phi = math.exp(-0.5 * z * z) / math.sqrt(2.0 * math.pi)
+    big_phi = 0.5 * (1.0 + math.erf(z / math.sqrt(2.0)))
+    overflow = sigma * phi - (C - mu) * (1.0 - big_phi)
+    return min(1.0, max(0.0, E * overflow / n))

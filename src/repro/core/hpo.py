@@ -71,6 +71,14 @@ SPACE_COMM = SPACE_INTERLEAVED + (
     Param("overlap", (0, 1)),
 )
 
+# the ExpertPlan axis (core/expertplan.py): expert-parallel ways for MoE
+# families.  ep only binds when it tiles the device count alongside
+# (node, tp, pp) — trial_plan downgrades untileable draws to ep=1, the
+# same smooth-space convention as qcomm/overlap.
+SPACE_MOE = SPACE_COMM + (
+    Param("ep", (1, 2, 4)),
+)
+
 
 def trial_plan(config: dict, *, gpus_per_node: int = 8,
                rules: str = "megatron_tp", precision: str = "bf16"):
@@ -82,7 +90,9 @@ def trial_plan(config: dict, *, gpus_per_node: int = 8,
     (``nnodes * gpus_per_node / (node * tp * pp)``) — exactly the paper's
     decomposition.  qcomm/overlap only exist at zero=3 and overlap only at
     pp=1, so other draws are downgraded to their no-op values rather than
-    failed — a smooth axis, not a wall of F-objective penalties.  Returns
+    failed — a smooth axis, not a wall of F-objective penalties.  The
+    SPACE_MOE ``ep`` axis follows the same convention: an ep that does not
+    tile the devices downgrades to 1 and dp absorbs the remainder.  Returns
     ``None`` when the config cannot tile the device count (the F-objective
     failure case: callers penalize it below every success so the surrogate
     learns to avoid it).  ``mbs`` stays a cost-model knob: the executor
@@ -106,8 +116,11 @@ def trial_plan(config: dict, *, gpus_per_node: int = 8,
         qcomm, overlap = "none", False
     if pp > 1:
         overlap = False
+    ep = int(config.get("ep", 1))
+    if ep < 1 or world % (node * tp * pp * ep) != 0:
+        ep = 1  # downgrade, not F-objective failure: keep the axis smooth
     return ParallelPlan(
-        dp=world // (node * tp * pp), tp=tp, pp=pp, node=node,
+        dp=world // (node * tp * pp * ep), tp=tp, pp=pp, ep=ep, node=node,
         virtual_stages=int(config.get("vs", 1)),
         gas=int(config.get("gas", 1)), zero=zero,
         qcomm=qcomm, overlap=overlap,

@@ -110,3 +110,16 @@ def gelu_mlp_in(x: jax.Array, w1: jax.Array,
     shape = x.shape
     out = gm.gelu_mlp_in(x.reshape(-1, shape[-1]), w1, interpret=interpret)
     return out.reshape(*shape[:-1], w1.shape[1])
+
+
+def grouped_mlp(x: jax.Array, w1: jax.Array, w3: jax.Array | None,
+                w2: jax.Array, mask: jax.Array, act: str = "swiglu",
+                interpret: bool | None = None) -> jax.Array:
+    """Fused grouped expert MLP over the expert-major slot layout:
+    x (E, N, d), w1/w3 (E, d, F), w2 (E, F, d), mask (E, N) -> (E, N, d).
+    Masked (padded-capacity) slots produce zero output and zero weight
+    gradients.  ``act`` in {"swiglu", "gelu"}; differentiable."""
+    from repro.kernels import grouped_mlp as gm
+    if interpret is None:
+        interpret = _on_cpu()
+    return gm.grouped_mlp(x, w1, w3, w2, mask, act=act, interpret=interpret)

@@ -72,6 +72,23 @@ def swiglu_ref(x: jax.Array, w1: jax.Array, w3: jax.Array) -> jax.Array:
     return (jax.nn.silu(a.astype(jnp.float32)) * b.astype(jnp.float32)).astype(x.dtype)
 
 
+def grouped_mlp_ref(x: jax.Array, w1: jax.Array, w3: jax.Array | None,
+                    w2: jax.Array, mask: jax.Array,
+                    act: str = "swiglu") -> jax.Array:
+    """Grouped expert MLP oracle: x (E, N, d), w1/w3 (E, d, F), w2
+    (E, F, d), mask (E, N) -> (E, N, d); masked slots are exactly zero."""
+    m = mask.astype(jnp.float32)[..., None]
+    x32 = x.astype(jnp.float32) * m
+    a = jnp.einsum("end,edf->enf", x32, w1.astype(jnp.float32))
+    if act == "swiglu":
+        h = jax.nn.silu(a) * jnp.einsum("end,edf->enf", x32,
+                                        w3.astype(jnp.float32))
+    else:
+        h = jax.nn.gelu(a, approximate=True)
+    out = jnp.einsum("enf,efd->end", h, w2.astype(jnp.float32)) * m
+    return out.astype(x.dtype)
+
+
 def cross_entropy_ref(h: jax.Array, w: jax.Array, labels: jax.Array,
                       valid_vocab: int | None = None) -> jax.Array:
     """Mean CE with full logits materialized (the oracle)."""

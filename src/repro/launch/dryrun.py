@@ -28,8 +28,10 @@ from repro.analysis import roofline as rl
 from repro.configs import ASSIGNED, get_config
 from repro.configs.shapes import SHAPES, InputShape, applicable
 from repro.core import compute as cmp
+from repro.core import expertplan as epl
 from repro.core import sharding as shd
 from repro.launch.mesh import make_production_mesh, mesh_for_plan
+from repro.models import moe as moe_mod
 from repro.models.common import axes_tree, shape_dtype_tree
 from repro.models.model import Model
 from repro.optim import AdamWConfig
@@ -64,8 +66,12 @@ def default_plan(multi_pod: bool, *, zero: int | None = None, gas: int = 1,
 
 
 def plan_mesh_name(plan: TrainPlan, multi_pod: bool = False) -> str:
+    ep = int(getattr(plan, "ep", 1) or 1)
     if plan.node > 1:
-        return f"node{plan.node}x{plan.pp}x{plan.dp}x{plan.tp}"
+        ep_s = f"xep{ep}" if ep > 1 else ""
+        return f"node{plan.node}x{plan.pp}x{plan.dp}{ep_s}x{plan.tp}"
+    if ep > 1:
+        return f"pipe{plan.pp}x{plan.dp}xep{ep}x{plan.tp}"
     if plan.pp > 1:
         return f"pipe{plan.pp}x{plan.dp}x{plan.tp}"
     return "2x16x16" if multi_pod else "16x16"
@@ -79,10 +85,11 @@ def lower_step(arch: str, shape_name: str, *, multi_pod: bool,
     cfg = cfg or get_config(arch)
     shape = SHAPES[shape_name]
     plan = plan or default_plan(multi_pod)
-    if plan.pp > 1 or plan.node > 1:
-        # 3D/4D plan: the plan itself defines the ("pipe", "data", "model")
-        # — or hierarchical ("node", "pipe", "data", "model") — mesh;
-        # validate against the real device count for a clear error
+    if plan.pp > 1 or plan.node > 1 or plan.ep > 1:
+        # 3D/4D/5D plan: the plan itself defines the ("pipe", "data",
+        # "model") — or hierarchical/expert ("node", "pipe", "data",
+        # "expert", "model") — mesh; validate against the real device
+        # count for a clear error
         mesh = mesh_for_plan(plan)
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
@@ -98,7 +105,8 @@ def lower_step(arch: str, shape_name: str, *, multi_pod: bool,
             "plan": plan.rules + (f"+zero{plan.zero}" if plan.zero else ""),
             "zero": plan.zero,
             "gas": plan.gas, "remat": plan.remat, "kernels": plan.kernels,
-            "node": plan.node, "qcomm": plan.qcomm, "overlap": plan.overlap}
+            "node": plan.node, "qcomm": plan.qcomm, "overlap": plan.overlap,
+            "ep": plan.ep}
 
     if shape.kind == "train":
         meta["tokens"] = shape.global_batch * shape.seq_len
@@ -117,6 +125,15 @@ def lower_step(arch: str, shape_name: str, *, multi_pod: bool,
         # bytes at >= 2, parameter bytes at 3; sits next to XLA's measured
         # peak in the record
         meta["state_bytes"] = train_state_bytes(model, mesh, plan)
+        if cfg.family == "moe":
+            # predicted (ExpertPlan's normal approximation) vs measured
+            # (Monte-Carlo over the real router) capacity-overflow drop —
+            # the pair BENCH_moe.json validates on live train metrics
+            _, g = moe_mod.group_shape(shape.global_batch, shape.seq_len)
+            meta["moe_drop_predicted"] = epl.predicted_drop_fraction(
+                cfg.top_k, cfg.n_experts, cfg.capacity_factor, g)
+            meta["moe_drop_measured"] = moe_mod.simulated_drop_fraction(
+                cfg, shape.global_batch, shape.seq_len)
         step = jit_train_step(model, AdamWConfig(), plan, mesh,
                               shape.global_batch, shape.seq_len)
         bsds, _ = batch_specs(cfg, shape.global_batch, shape.seq_len)
@@ -284,6 +301,9 @@ def main() -> None:
                     help="tensor-parallel ways of an explicit plan (default 16)")
     ap.add_argument("--node", type=int, default=1,
                     help="hierarchical node-axis ways (4D CommPlan mesh)")
+    ap.add_argument("--ep", type=int, default=1,
+                    help="expert-parallel ways (ExpertPlan \"expert\" mesh "
+                         "axis; MoE families only)")
     ap.add_argument("--qcomm", choices=("none", "gather", "both"),
                     default="none",
                     help="int8 block-quantized zero=3 collectives")
@@ -299,6 +319,7 @@ def main() -> None:
     explicit_plan = (args.pp > 1 or args.gas > 1 or args.virtual_stages > 1
                      or args.dp is not None or args.tp is not None
                      or args.zero is not None or args.node > 1
+                     or args.ep > 1
                      or args.qcomm != "none" or args.overlap)
 
     def plan_for(mp: bool):
@@ -307,7 +328,7 @@ def main() -> None:
         # mirror default_plan's pod-as-extra-DP axis so multi-pod records
         # keep the batch sharded over the pod axis of the production mesh
         return TrainPlan(dp=args.dp or 16, tp=args.tp or 16, pp=args.pp,
-                         node=args.node, qcomm=args.qcomm,
+                         ep=args.ep, node=args.node, qcomm=args.qcomm,
                          overlap=args.overlap,
                          virtual_stages=args.virtual_stages, gas=args.gas,
                          precision="bf16", zero=args.zero,

@@ -89,6 +89,18 @@ VARIANTS = {
         plan_fn=lambda p: dataclasses.replace(p, zero=3, qcomm="gather",
                                               overlap=True),
         note="quantized + overlapped gathers combined"),
+    # ExpertPlan points (core/expertplan.py): a real "expert" mesh axis with
+    # capacity-factor token all-to-all dispatch — vs the rule-override
+    # flavours above that re-map the experts logical axis onto model/data
+    "ep2": _v(
+        plan_fn=lambda p: dataclasses.replace(p, dp=8, ep=2),
+        note="expert parallelism 2-way on a dedicated mesh axis: expert "
+             "weights sharded E/2 per group, tokens all-to-all'd at "
+             "capacity C (dp8 x ep2 x tp16 keeps 256 devices)"),
+    "ep4": _v(
+        plan_fn=lambda p: dataclasses.replace(p, dp=4, ep=4),
+        note="4-way expert parallelism (dp4 x ep4 x tp16): E/4 experts "
+             "resident per group, 4x less expert-weight memory per device"),
     "moe_dp_attn": _v(
         plan_fn=lambda p: dataclasses.replace(
             p, rule_overrides=(("heads", None), ("kv_heads", None),
@@ -199,7 +211,7 @@ def main():
                      "pp2_gas8"],
         "arctic": ["baseline", "ep_model", "embed_replicated", "ep_model+embed_repl",
                    "pad_vocab256", "moe_dp_attn", "moe_dp_attn+seq", "seq_shard",
-                   "fsdp_seq"],
+                   "fsdp_seq", "ep2", "ep4"],
     }
     if args.all:
         for pair, variants in plan_matrix.items():

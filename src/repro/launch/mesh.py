@@ -70,6 +70,29 @@ def make_mesh_4d(node: int, pipe: int, data: int, model: int):
     return _mesh((node, pipe, data, model), ("node", "pipe", "data", "model"))
 
 
+def make_mesh_4d_ep(pipe: int, data: int, expert: int, model: int):
+    """Expert-parallel 4D mesh: ("pipe", "data", "expert", "model").
+
+    "expert" sits between "data" and "model": TP all-reduces keep the
+    fastest innermost links, the MoE token all-to-all the next tier, and
+    DP/PP the slower ones.  The token-group dim is sharded over the
+    *composite* ("data", "expert") batch axes (see
+    ParallelPlan.sharding_rules), so an ep plan sees the same per-device
+    token count as the flat dp·ep plan and matches its trajectory exactly.
+    """
+    return _mesh((pipe, data, expert, model),
+                 ("pipe", "data", "expert", "model"))
+
+
+def make_mesh_5d(node: int, pipe: int, data: int, expert: int, model: int):
+    """Hierarchical + expert-parallel mesh:
+    ("node", "pipe", "data", "expert", "model") — node-major like
+    make_mesh_4d, with the expert axis inserted per make_mesh_4d_ep.
+    """
+    return _mesh((node, pipe, data, expert, model),
+                 ("node", "pipe", "data", "expert", "model"))
+
+
 def make_pipeline_mesh(pipe: int, data: int = 1):
     """Mesh for pipeline-parallel experiments: stages on the "pipe" axis."""
     return _mesh((pipe, data), ("pipe", "data"))
@@ -81,15 +104,18 @@ def single_device_mesh():
 
 def validate_plan_shape(pipe: int, data: int, model: int,
                         n_devices: int | None = None,
-                        node: int = 1) -> None:
-    """Raise a clear error when (node, pp, dp, tp) cannot tile the devices."""
+                        node: int = 1, ep: int = 1) -> None:
+    """Raise a clear error when (node, pp, dp, ep, tp) cannot tile the
+    devices."""
     for name, v in (("pp", pipe), ("dp", data), ("tp", model),
-                    ("node", node)):
+                    ("node", node), ("ep", ep)):
         if v < 1:
             raise ValueError(f"--{name} must be >= 1, got {v}")
     n = jax.device_count() if n_devices is None else n_devices
-    want = node * pipe * data * model
+    want = node * pipe * data * ep * model
     plan_txt = f"pp={pipe} x dp={data} x tp={model}"
+    if ep > 1:
+        plan_txt = f"pp={pipe} x dp={data} x ep={ep} x tp={model}"
     if node > 1:
         plan_txt = f"node={node} x " + plan_txt
     if want != n:
@@ -106,11 +132,19 @@ def mesh_for_plan(plan, n_devices: int | None = None, *, validate: bool = True):
     ``plan`` is any object with ``pp``/``dp``/``tp`` ints (a
     :class:`repro.runtime.train_loop.ParallelPlan`).  pp == 1 still yields a
     3D mesh with a size-1 pipe axis, so one executor covers every plan.
-    Plans with ``node > 1`` get the 4D hierarchical mesh instead.
+    Plans with ``node > 1`` get the 4D hierarchical mesh, ``ep > 1`` the
+    expert-parallel 4D/5D mesh (``ep == 1`` adds no axis — the expert
+    sharding rules then fall back to replication, the pre-EP executor).
     """
     node = int(getattr(plan, "node", 1) or 1)
+    ep = int(getattr(plan, "ep", 1) or 1)
     if validate:
-        validate_plan_shape(plan.pp, plan.dp, plan.tp, n_devices, node=node)
+        validate_plan_shape(plan.pp, plan.dp, plan.tp, n_devices, node=node,
+                            ep=ep)
+    if ep > 1:
+        if node > 1:
+            return make_mesh_5d(node, plan.pp, plan.dp, ep, plan.tp)
+        return make_mesh_4d_ep(plan.pp, plan.dp, ep, plan.tp)
     if node > 1:
         return make_mesh_4d(node, plan.pp, plan.dp, plan.tp)
     return make_mesh_3d(plan.pp, plan.dp, plan.tp)

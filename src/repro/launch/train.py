@@ -41,24 +41,27 @@ def parse_plan(args, n_devices: int) -> ParallelPlan:
     tp = args.tp if args.tp is not None else 1
     pp = args.pp
     node = args.node
+    ep = args.ep
     if args.dp is not None:
         dp = args.dp
         if args.tp is None:
-            rem = n_devices // max(node * dp * pp, 1)
+            rem = n_devices // max(node * dp * pp * ep, 1)
             tp = max(rem, 1)
     else:
-        rem = n_devices // max(node * tp * pp, 1)
+        rem = n_devices // max(node * tp * pp * ep, 1)
         dp = max(rem, 1)
     plan = ParallelPlan(
-        dp=dp, tp=tp, pp=pp, node=node, virtual_stages=args.virtual_stages,
+        dp=dp, tp=tp, pp=pp, ep=ep, node=node,
+        virtual_stages=args.virtual_stages,
         rules=args.rules, zero=args.zero, gas=args.gas,
         qcomm=args.qcomm, overlap=args.overlap, comm_block=args.comm_block,
         precision=args.precision, remat=args.remat, kernels=args.kernels)
     if plan.n_devices != n_devices:
         raise SystemExit(
-            f"error: node={node} x dp={dp} x tp={tp} x pp={pp} = "
+            f"error: node={node} x dp={dp} x ep={ep} x tp={tp} x pp={pp} = "
             f"{plan.n_devices} devices "
-            f"but jax.device_count() = {n_devices}; adjust --dp/--tp/--pp "
+            f"but jax.device_count() = {n_devices}; adjust "
+            f"--dp/--ep/--tp/--pp "
             f"(or XLA_FLAGS=--xla_force_host_platform_device_count=...)")
     return plan
 
@@ -111,6 +114,11 @@ def main() -> None:
     ap.add_argument("--tp", "--model-parallel", dest="tp", type=int, default=None,
                     help="tensor-parallel ways")
     ap.add_argument("--pp", type=int, default=1, help="pipeline stages")
+    ap.add_argument("--ep", type=int, default=1,
+                    help="expert-parallel ways (core/expertplan.py): shard "
+                         "MoE expert weights over a dedicated \"expert\" "
+                         "mesh axis with capacity-factor token all-to-all "
+                         "dispatch; requires n_experts %% ep == 0")
     ap.add_argument("--virtual-stages", type=int, default=1,
                     help="interleaved virtual stages per pipe rank (pp > 1)")
     ap.add_argument("--ckpt-dir", default=None)
@@ -121,24 +129,21 @@ def main() -> None:
 
     cfg = get_config(args.arch)
     if args.reduced:
-        cfg = cfg.reduced()
+        # ep-aware clamp: the reduced expert count must stay divisible
+        # by the plan's expert ways (no-op for ep=1 / non-moe families)
+        cfg = cfg.reduced(ep=args.ep)
     n_dev = jax.device_count()
     plan = parse_plan(args, n_dev)
-    if args.kernels:
-        # loud, up-front validation of the kernel fast path against this
-        # architecture's flavour (the per-op fallbacks also warn at trace).
-        # norm, act, and attention are fully fused now: rmsnorm + layernorm
-        # kernels, swiglu + gelu gate kernels, and the flash kernel handles
-        # logit softcap natively — only MoE expert einsums stay jnp
-        if cfg.family in ("moe",):
-            print("warning: --kernels on an MoE family: expert einsums stay "
-                  "jnp (norm/shared-MLP/attention/CE kernels still engage)")
+    # --kernels is fully fused on every family now: rmsnorm + layernorm,
+    # swiglu + gelu gates, flash attention (softcap native), CE, and the
+    # grouped expert MLP (kernels/grouped_mlp.py) for MoE — no fallbacks
     mesh = mesh_for_plan(plan)
     node_s = f"node={plan.node}," if plan.node > 1 else ""
+    ep_s = f"ep={plan.ep}," if plan.ep > 1 else ""
     comm_s = (f" qcomm={plan.qcomm} overlap={plan.overlap}"
               if (plan.qcomm != "none" or plan.overlap) else "")
     print(f"arch={cfg.name} params={Model(cfg).n_params():,} "
-          f"mesh=({node_s}pp={plan.pp},dp={plan.dp},tp={plan.tp})"
+          f"mesh=({node_s}pp={plan.pp},dp={plan.dp},{ep_s}tp={plan.tp})"
           f"{f' v={plan.virtual_stages}' if plan.virtual_stages > 1 else ''} "
           f"rules={plan.rules} zero={plan.zero} gas={plan.gas} "
           f"precision={plan.precision} remat={plan.remat} "

@@ -170,8 +170,18 @@ class ModelConfig:
     def is_encdec(self) -> bool:
         return self.enc_layers > 0
 
-    def reduced(self, **overrides: Any) -> "ModelConfig":
-        """Smoke-test variant: same family/flavours, tiny dims."""
+    def reduced(self, *, ep: int = 1, **overrides: Any) -> "ModelConfig":
+        """Smoke-test variant: same family/flavours, tiny dims.
+
+        ``ep`` declares the expert-parallel ways the variant must support:
+        the expert-count clamp rounds to an ep-divisible value (a naive
+        ``min(n_experts, 4)`` silently produces indivisible counts for
+        models whose full expert count isn't a multiple of ep), and an
+        explicit ``n_experts`` override that breaks divisibility raises
+        ``ExpertDivisibilityError`` here instead of failing later at mesh
+        build.
+        """
+        from repro.core import expertplan as epl
         d_model = min(self.d_model, 256)
         n_heads = min(self.n_heads, 4)
         n_kv = max(1, min(self.n_kv_heads, n_heads, 2))
@@ -184,7 +194,9 @@ class ModelConfig:
             d_ff=min(self.d_ff, 512),
             vocab_size=min(self.vocab_size, 512),
             head_dim=d_model // n_heads,
-            n_experts=min(self.n_experts, 4),
+            n_experts=(epl.round_experts(min(self.n_experts, 4), ep)
+                       if self.n_experts and ep > 1
+                       else min(self.n_experts, 4)),
             top_k=min(self.top_k, 2),
             dense_d_ff=min(self.dense_d_ff, 256) if self.dense_d_ff else 0,
             ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
@@ -197,4 +209,7 @@ class ModelConfig:
             sliding_window=min(self.sliding_window, 16) if self.sliding_window else None,
         )
         base.update(overrides)
+        if ep > 1 and base["n_experts"]:
+            epl.validate_experts(base["n_experts"], ep,
+                                 where=f"{self.name}.reduced(ep={ep})")
         return dataclasses.replace(self, **base)

@@ -104,7 +104,7 @@ class Model:
     def __init__(self, cfg: ModelConfig, compute_dtype: Any = jnp.bfloat16,
                  q_chunk: int = 1024,
                  compute: ComputePolicy | None = None,
-                 comm: Any = None):
+                 comm: Any = None, ep: Any = None):
         self.cfg = cfg
         self.compute_dtype = compute_dtype
         self.q_chunk = q_chunk
@@ -115,6 +115,11 @@ class Model:
         # plan overlaps weight gathers with compute, run_program consumes it
         # for per-chunk gathers of the layer stack; None = plain scans
         self.comm = comm
+        # expert-parallel dispatch context (models/moe.py:ExpertDispatch):
+        # built by the executor for plans with ep > 1 — the MoE blocks wrap
+        # their expert compute in its all-to-all sharding constraints.
+        # None (serving paths, ep == 1) = replicated/data-axis experts
+        self.ep = ep
 
     # ------------------------------------------------------------------
     # Specs / init
@@ -210,8 +215,8 @@ class Model:
         elif fam == "moe":
             segments = (sp.Segment(
                 "moe_unit", layer_params, _n_stack(cfg),
-                moe.segment_body(cfg, pol, self.q_chunk)),)
-            carries = aux
+                moe.segment_body(cfg, pol, self.q_chunk, ep=self.ep)),)
+            carries = aux + (sp.CarrySpec("moe_drop", sp.ACCUM),)
         elif fam == "rwkv":
             segments = (sp.Segment(
                 "rwkv", layer_params, cfg.n_layers,
@@ -287,8 +292,9 @@ class Model:
     # ------------------------------------------------------------------
     # Forward / loss
     # ------------------------------------------------------------------
-    def hidden_states(self, params: dict, batch: dict) -> tuple[jax.Array, jax.Array]:
-        """Returns (final-normed hidden states, moe aux loss)."""
+    def hidden_states(self, params: dict, batch: dict
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Returns (final-normed hidden states, moe aux loss, moe drop)."""
         cfg = self.cfg
         cparams = _cast_floating(params, self.compute_dtype,
                                  skip=("state",))  # weights in compute dtype
@@ -301,15 +307,17 @@ class Model:
                                   policy=self.compute, comm=self.comm)
         x = layers.apply_norm(x, cparams["final_norm"], cfg.norm, cfg.rms_eps,
                               use_kernel=self.compute.kernels)
-        return x, carry.get("aux", jnp.float32(0.0))
+        return (x, carry.get("aux", jnp.float32(0.0)),
+                carry.get("moe_drop", jnp.float32(0.0)))
 
     def logits(self, params: dict, batch: dict) -> jax.Array:
-        h, _ = self.hidden_states(params, batch)
+        h, _, _ = self.hidden_states(params, batch)
         W = self._unembed_matrix(params).astype(self.compute_dtype)
         return (h @ W).astype(jnp.float32)[..., :self.cfg.vocab_size]
 
     def _loss_from_hidden(self, params: dict, h: jax.Array, batch: dict,
-                          aux: jax.Array) -> tuple[jax.Array, dict]:
+                          aux: jax.Array,
+                          drop: jax.Array | float = 0.0) -> tuple[jax.Array, dict]:
         """Shared LM-loss tail: final-normed hidden states -> (loss, metrics)."""
         cfg = self.cfg
         # keep the backward signal through the stack in compute dtype
@@ -325,11 +333,14 @@ class Model:
                                     valid_vocab=self.cfg.vocab_size,
                                     policy=self.compute)
         total = ce + MOE_AUX_COEF * aux / max(cfg.n_layers, 1)
-        return total, {"ce": ce, "moe_aux": aux}
+        # per-block mean of the accumulated measured drop fraction
+        n_moe = _n_stack(cfg) if cfg.family == "moe" else 1
+        return total, {"ce": ce, "moe_aux": aux,
+                       "moe_drop": jnp.float32(drop) / n_moe}
 
     def loss(self, params: dict, batch: dict) -> tuple[jax.Array, dict]:
-        h, aux = self.hidden_states(params, batch)
-        return self._loss_from_hidden(params, h, batch, aux)
+        h, aux, drop = self.hidden_states(params, batch)
+        return self._loss_from_hidden(params, h, batch, aux, drop)
 
     def loss_pipelined(self, params: dict, batch: dict, *, mesh: Any,
                        pp: int, n_micro: int, virtual_stages: int = 1,
@@ -386,11 +397,13 @@ class Model:
             pipe_axis=pipe_axis, data_axis=data_axis)
         out = pipelined(stage_params, payload)
         h = out["x"].reshape(B, *x.shape[1:])
-        # per-microbatch aux means match the pp==1 gas scan's average
+        # per-microbatch aux/drop means match the pp==1 gas scan's average
         aux = (jnp.mean(out["aux"]) if "aux" in out else jnp.float32(0.0))
+        drop = (jnp.mean(out["moe_drop"]) if "moe_drop" in out
+                else jnp.float32(0.0))
         h = layers.apply_norm(h, cparams["final_norm"], cfg.norm, cfg.rms_eps,
                               use_kernel=pol.kernels)
-        return self._loss_from_hidden(params, h, batch, aux)
+        return self._loss_from_hidden(params, h, batch, aux, drop)
 
     # ------------------------------------------------------------------
     # Caches
@@ -471,7 +484,7 @@ class Model:
                 x, k, v = blocks.self_attn_block(lp["attn"], x, cfg, causal=True,
                                                  q_chunk=self.q_chunk,
                                                  return_kv=True, policy=pol)
-                x, a = moe.moe_block(lp["moe"], x, cfg, policy=pol)
+                x, a, _ = moe.moe_block(lp["moe"], x, cfg, policy=pol)
                 return (x, aux + a), {"moe_kv": _kv_into_cache(k, v, clen, cfg.kv_quant),
                                       "dense": dense_kvs}
 
@@ -485,7 +498,7 @@ class Model:
                                                  q_chunk=self.q_chunk,
                                                  return_kv=True, policy=pol)
                 if cfg.family == "moe":
-                    x, a = moe.moe_block(lp["moe"], x, cfg, policy=pol)
+                    x, a, _ = moe.moe_block(lp["moe"], x, cfg, policy=pol)
                     aux = aux + a
                 else:
                     x = blocks.mlp_block(lp["mlp"], x, cfg, policy=pol)
@@ -573,7 +586,7 @@ class Model:
 
                 x, ndense = jax.lax.scan(dense_body, x, (lp["dense"], cl["dense"]))
                 x, nkv = blocks.self_attn_decode(lp["attn"], x, cl["moe_kv"], pos_t, cfg)
-                x, _ = moe.moe_block(lp["moe"], x, cfg)
+                x, _, _ = moe.moe_block(lp["moe"], x, cfg)
                 return x, {"moe_kv": nkv, "dense": ndense}
             x, ncs = jax.lax.scan(body, x, (cparams["layers"], cache["layers"]))
             new_cache["layers"] = ncs
@@ -639,7 +652,7 @@ def _decode_layer(lp: dict, x: jax.Array, cl: dict, pos: jax.Array,
                   cfg: ModelConfig, model: Model):
     x, nc = blocks.self_attn_decode(lp["attn"], x, cl, pos, cfg)
     if cfg.family == "moe":
-        x, _ = moe.moe_block(lp["moe"], x, cfg)
+        x, _, _ = moe.moe_block(lp["moe"], x, cfg)
     else:
         x = blocks.mlp_block(lp["mlp"], x, cfg)
     return x, nc

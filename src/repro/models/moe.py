@@ -1,33 +1,79 @@
 """Mixture-of-Experts FFN with grouped, capacity-bounded dispatch.
 
-Tokens are reshaped into groups of ~4096 (the group dim inherits the batch's
-``data`` sharding) and routed with *gather/scatter* dispatch instead of the
-classic GShard one-hot einsum: the (g, E, C) one-hot tensor and its
-O(tokens * E * C * d) dispatch matmuls would dominate both memory and FLOPs
-at million-token batches.  Slot-to-token index maps keep dispatch cost
-proportional to tokens — the TPU-native formulation (DESIGN.md §2).
+Tokens are grouped *per sequence* (long sequences split into ~4096-token
+chunks), so the group dim is a pure reshape of the batch dim and inherits
+the batch's composite ("data", "expert") sharding — plan-independent
+routing, identical fp32 trajectories across every (dp, ep, pp) layout.
+Routing uses *gather/scatter* dispatch instead of the classic GShard
+one-hot einsum: the (g, E, C) one-hot tensor and its O(tokens * E * C * d)
+dispatch matmuls would dominate both memory and FLOPs at million-token
+batches.  Slot-to-token index maps keep dispatch cost proportional to
+tokens — the TPU-native formulation (DESIGN.md §2).
 
-Expert weights are sharded over the ``data`` axis (expert parallelism);
-under GSPMD the grouped dispatch lowers to the all-to-all exchange the
-paper's Megatron-DeepSpeed MoE performs.
+Expert parallelism (``ParallelPlan(ep=...)``, ``core/expertplan.py``):
+expert weights shard over the dedicated "expert" mesh axis and dispatch
+becomes the pair of GSPMD sharding constraints in :class:`ExpertDispatch`
+— group-major (G on ("data", "expert")) to expert-major (E on "expert")
+and back — which XLA lowers to the capacity-C token all-to-all.  Pure
+shardings only, no manual gathers inside jit (the XLA CPU SPMD re-stacking
+caveat, ROADMAP standing caveats).  With ``ep == 1`` the experts stay on
+the data axis as before and the constraints are skipped.
+
+``policy.kernels`` routes the expert matmuls through the fused Pallas
+grouped-MLP kernel (``kernels/grouped_mlp.py`` — slot-mask-aware, swiglu
+and gelu flavours); nothing on the MoE path falls back to jnp with a
+warning anymore.
 
 Supports:
   * top-1 routing + shared expert                    (llama4-maverick)
   * top-2 routing + parallel dense residual branch   (arctic)
   * switch-style load-balance auxiliary loss
+  * measured dropped-assignment fraction as a train metric (never a
+    silent truncation — see ``expertplan.predicted_drop_fraction``)
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import expertplan as epl
 from repro.core.compute import ComputePolicy, resolve as resolve_policy
 from repro.models import layers
 from repro.models.blocks import mlp_specs, norm_spec
 from repro.models.common import ModelConfig, Spec
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertDispatch:
+    """jax-side EP context (built by ``train_loop.build_train_step``).
+
+    ``group_axes`` is the composite batch sharding *without* the expert
+    axis (e.g. ``("data",)`` or ``("node", "data")``); the group dim of
+    activations is sharded over ``group_axes + (expert_axis,)``.  The
+    dispatch constraint moves the expert dim onto ``expert_axis`` (and the
+    group dim back to ``group_axes`` alone) — one all-to-all; the combine
+    constraint is the inverse.
+    """
+    mesh: Any
+    expert_axis: str = "expert"
+    group_axes: tuple = ("data",)
+
+    def dispatch(self, t: jax.Array) -> jax.Array:
+        """(G, E, C, d) group-major -> expert-major (the token all-to-all)."""
+        spec = P(self.group_axes, self.expert_axis, None, None)
+        return jax.lax.with_sharding_constraint(
+            t, NamedSharding(self.mesh, spec))
+
+    def combine(self, t: jax.Array) -> jax.Array:
+        """(G, E, C, d) expert-major -> group-major (the inverse all-to-all)."""
+        spec = P(self.group_axes + (self.expert_axis,), None, None, None)
+        return jax.lax.with_sharding_constraint(
+            t, NamedSharding(self.mesh, spec))
 
 
 def moe_specs(cfg: ModelConfig) -> dict:
@@ -47,20 +93,26 @@ def moe_specs(cfg: ModelConfig) -> dict:
     return spec
 
 
-def group_shape(n_tokens: int, target: int = 4096) -> tuple[int, int]:
-    """(n_groups, group_size); groups inherit the data sharding."""
-    if n_tokens <= 2 * target:
-        return 1, n_tokens
-    g = target
-    while n_tokens % g != 0:
-        g -= 1
-    return n_tokens // g, g
+def group_shape(batch: int, seq: int, target: int = 4096) -> tuple[int, int]:
+    """(n_groups, group_size) for a (batch, seq) token grid.
+
+    One routing group per sequence; sequences longer than 2*target split
+    into the largest <= target chunk that divides them.  Grouping is a
+    pure reshape of (B, S) — batch-major — so the group dim inherits the
+    batch sharding and G is independent of the parallel plan (loss
+    trajectories match across dp/ep/pp layouts by construction).
+    """
+    g = seq
+    if g > 2 * target:
+        g = target
+        while seq % g != 0:
+            g -= 1
+    return batch * (seq // g), g
 
 
 def moe_capacity(group_size: int, cfg: ModelConfig) -> int:
-    cap = int(np.ceil(cfg.capacity_factor * group_size * max(cfg.top_k, 1)
-                      / cfg.n_experts))
-    return max(cap, 1)
+    return epl.capacity(group_size, cfg.top_k, cfg.n_experts,
+                        cfg.capacity_factor)
 
 
 def _route(gates: jax.Array, top_k: int, capacity: int):
@@ -102,30 +154,24 @@ def _route(gates: jax.Array, top_k: int, capacity: int):
     return assignments, slot_to_token, slot_valid, aux
 
 
-def moe_block(params: dict, x: jax.Array, cfg: ModelConfig,
-              policy: ComputePolicy | None = None) -> tuple[jax.Array, jax.Array]:
-    """x: (B, S, d) -> (out, aux_loss).  ``policy.kernels`` fuses the norm
-    and the shared/dense-residual MLPs; the expert einsums stay jnp (their
-    (E, C) slot layout has no Pallas kernel yet)."""
-    pol = resolve_policy(policy)
-    B, S, d = x.shape
-    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps,
-                          use_kernel=pol.kernels)
-    N = B * S
-    G, g = group_shape(N)
-    C = moe_capacity(g, cfg)
-    E = cfg.n_experts
-    xg = h.reshape(G, g, d)
+def _expert_mlps(params: dict, expert_in: jax.Array, slot_valid: jax.Array,
+                 cfg: ModelConfig, pol: ComputePolicy) -> jax.Array:
+    """(G, E, C, d) expert slots -> (G, E, C, d) expert outputs.
 
-    logits = (xg @ params["router"]).astype(jnp.float32)       # (G, g, E)
-    gates = jax.nn.softmax(logits, axis=-1)
-    assignments, slot_to_token, slot_valid, aux = _route(gates, cfg.top_k, C)
-
-    # dispatch: gather token activations into (G, E*C, d) expert slots
-    expert_in = jnp.take_along_axis(xg, slot_to_token[..., None], axis=1)
-    expert_in = jnp.where(slot_valid[..., None], expert_in, 0)
-    expert_in = expert_in.reshape(G, E, C, d)
-
+    ``pol.kernels`` runs the fused Pallas grouped-MLP on the expert-major
+    (E, G*C, d) layout with the slot mask in-kernel; otherwise the jnp
+    einsums (mathematically identical — padded slots are zero on input
+    either way).
+    """
+    G, E, C, d = expert_in.shape
+    if pol.kernels:
+        from repro.kernels import ops as kernel_ops
+        xs = expert_in.transpose(1, 0, 2, 3).reshape(E, G * C, d)
+        ms = (slot_valid.reshape(G, E, C).transpose(1, 0, 2)
+              .reshape(E, G * C).astype(xs.dtype))
+        out = kernel_ops.grouped_mlp(xs, params["w1"], params.get("w3"),
+                                     params["w2"], ms, act=cfg.act)
+        return out.reshape(E, G, C, d).transpose(1, 0, 2, 3)
     if cfg.act == "swiglu":
         hmid = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, params["w1"]))
         hmid = hmid * jnp.einsum("gecd,edf->gecf", expert_in, params["w3"])
@@ -133,7 +179,45 @@ def moe_block(params: dict, x: jax.Array, cfg: ModelConfig,
         hmid = jax.nn.gelu(
             jnp.einsum("gecd,edf->gecf", expert_in, params["w1"]),
             approximate=True)
-    expert_out = jnp.einsum("gecf,efd->gecd", hmid, params["w2"])
+    return jnp.einsum("gecf,efd->gecd", hmid, params["w2"])
+
+
+def moe_block(params: dict, x: jax.Array, cfg: ModelConfig,
+              policy: ComputePolicy | None = None,
+              ep: ExpertDispatch | None = None,
+              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss, drop_fraction).
+
+    ``drop_fraction`` is the measured share of routed (token, k)
+    assignments dropped at the capacity limit — fp32 scalar, surfaced as
+    the ``moe_drop`` train metric.  ``ep`` wraps the expert compute in the
+    dispatch/combine all-to-all constraints (see :class:`ExpertDispatch`).
+    """
+    pol = resolve_policy(policy)
+    B, S, d = x.shape
+    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps,
+                          use_kernel=pol.kernels)
+    G, g = group_shape(B, S)
+    C = moe_capacity(g, cfg)
+    E = cfg.n_experts
+    xg = h.reshape(G, g, d)
+
+    logits = (xg @ params["router"]).astype(jnp.float32)       # (G, g, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    assignments, slot_to_token, slot_valid, aux = _route(gates, cfg.top_k, C)
+    drop = (1.0 - slot_valid.sum().astype(jnp.float32)
+            / float(G * g * max(cfg.top_k, 1)))
+
+    # dispatch: gather token activations into (G, E*C, d) expert slots
+    expert_in = jnp.take_along_axis(xg, slot_to_token[..., None], axis=1)
+    expert_in = jnp.where(slot_valid[..., None], expert_in, 0)
+    expert_in = expert_in.reshape(G, E, C, d)
+    if ep is not None:
+        expert_in = ep.dispatch(expert_in)
+
+    expert_out = _expert_mlps(params, expert_in, slot_valid, cfg, pol)
+    if ep is not None:
+        expert_out = ep.combine(expert_out)
     expert_out = expert_out.reshape(G, E * C, d)
 
     # combine: gather each token's expert outputs back, weighted
@@ -152,14 +236,34 @@ def moe_block(params: dict, x: jax.Array, cfg: ModelConfig,
     if cfg.moe_dense_residual:
         out = out + layers.mlp(h, params["dense"], cfg.act,
                                use_kernel=pol.kernels)
-    return x + out, aux.astype(jnp.float32)
+    return x + out, aux.astype(jnp.float32), drop
+
+
+def simulated_drop_fraction(cfg: ModelConfig, batch: int, seq: int,
+                            seed: int = 0, samples: int = 4) -> float:
+    """Measured drop fraction of the *actual* router (``_route``) at the
+    run's (G, g, E, C), under softmax-of-Gaussian gates — what dryrun
+    reports next to the analytic ``expertplan.predicted_drop_fraction``
+    without executing a train step."""
+    G, g = group_shape(batch, seq)
+    C = moe_capacity(g, cfg)
+    fracs = []
+    for i in range(samples):
+        key = jax.random.PRNGKey(seed + i)
+        gates = jax.nn.softmax(
+            jax.random.normal(key, (G, g, cfg.n_experts), jnp.float32), -1)
+        _, _, slot_valid, _ = _route(gates, cfg.top_k, C)
+        fracs.append(1.0 - float(np.asarray(slot_valid.sum()))
+                     / (G * g * max(cfg.top_k, 1)))
+    return float(np.mean(fracs))
 
 
 def segment_body(cfg: ModelConfig, policy: ComputePolicy | None,
-                 q_chunk: int):
+                 q_chunk: int, ep: ExpertDispatch | None = None):
     """StageProgram scan body for one MoE stack unit: the interleaved
     dense sub-stack (``moe_every > 1``), attention, and the MoE FFN whose
-    load-balance loss accumulates into the ``carry["aux"]`` channel."""
+    load-balance loss and measured drop fraction accumulate into the
+    ``carry["aux"]`` / ``carry["moe_drop"]`` channels."""
     from repro.models import blocks
 
     def body(lp: dict, x: jax.Array, carry: dict):
@@ -172,6 +276,7 @@ def segment_body(cfg: ModelConfig, policy: ComputePolicy | None,
             x, _ = jax.lax.scan(dense_body, x, lp["dense"])
         x = blocks.self_attn_block(lp["attn"], x, cfg, causal=True,
                                    q_chunk=q_chunk, policy=policy)
-        x, a = moe_block(lp["moe"], x, cfg, policy=policy)
-        return x, {**carry, "aux": carry["aux"] + a}
+        x, a, dr = moe_block(lp["moe"], x, cfg, policy=policy, ep=ep)
+        return x, {**carry, "aux": carry["aux"] + a,
+                   "moe_drop": carry["moe_drop"] + dr}
     return body

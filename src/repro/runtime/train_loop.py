@@ -57,11 +57,13 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import commplan as cpl
+from repro.core import expertplan as epl
 from repro.core import memplan as mpl
 from repro.core import precision as prec
 from repro.core import sharding as shd
 from repro.core.compute import DEFAULT_POLICY, ComputePolicy
 from repro.core.memplan import MemoryPlan
+from repro.models import moe as moe_mod
 from repro.models.common import ModelConfig
 from repro.models.model import Model
 from repro.optim import AdamWConfig, adamw_init, adamw_update
@@ -76,6 +78,10 @@ class ParallelPlan:
     pp: int = 1                     # pipeline stages ("pipe" mesh axis)
     virtual_stages: int = 1         # extra stage granularity per pipe rank
                                     # (pp*v logical stages; see pipeline_spmd)
+    ep: int = 1                     # expert-parallel ways ("expert" mesh
+                                    # axis; core/expertplan.py) — MoE experts
+                                    # sharded over their own axis, token
+                                    # dispatch as a capacity-C all-to-all
     rules: str = "megatron_tp"      # sharding strategy preset
     zero: int | None = None         # ZeRO stage 0|1|2|3 (core/memplan.py);
                                     # None -> default stage 1
@@ -105,12 +111,13 @@ class ParallelPlan:
     model_axis: str = "model"
     pipe_axis: str = "pipe"
     node_axis: str = "node"
+    expert_axis: str = "expert"
     extra_dp_axes: tuple[str, ...] = ()   # e.g. ("pod",) in multi-pod mode
     # hillclimbing hook: ((logical_axis, mesh_axis|None), ...) rule overrides
     rule_overrides: tuple = ()
 
     def __post_init__(self):
-        for name in ("dp", "tp", "pp", "virtual_stages", "gas", "node"):
+        for name in ("dp", "tp", "pp", "virtual_stages", "gas", "node", "ep"):
             if getattr(self, name) < 1:
                 raise ValueError(f"{name} must be >= 1, got {getattr(self, name)}")
         stage = mpl.resolve_stage(self.zero, self.zero1)  # raises on zero1=
@@ -128,7 +135,7 @@ class ParallelPlan:
 
     @property
     def n_devices(self) -> int:
-        return self.node * self.dp * self.tp * self.pp
+        return self.node * self.dp * self.ep * self.tp * self.pp
 
     @property
     def n_stages(self) -> int:
@@ -151,23 +158,39 @@ class ParallelPlan:
                             node_axis=self.node_axis,
                             data_axis=self.data_axis)
 
+    def expert_plan(self) -> epl.ExpertPlan:
+        """The expert-parallelism policy this plan carries."""
+        return epl.ExpertPlan(ep=self.ep, expert_axis=self.expert_axis,
+                              data_axis=self.data_axis,
+                              node_axis=self.node_axis)
+
     def sharding_rules(self) -> shd.ShardingRules:
         preset = shd.PRESETS[self.rules]
         rules = preset(data_axis=self.data_axis,
                        model_axis=self.model_axis,
                        pipe_axis=self.pipe_axis if self.pp > 1 else None)
         # the batch rides every DP-flavored axis, slowest first: extra pod
-        # axes, then the hierarchical node axis, then data — node-major
-        # order matches the flat dp = node*dp device order, so hierarchical
-        # plans reproduce the flat plan's trajectory exactly
+        # axes, then the hierarchical node axis, then data, then expert —
+        # node-major order matches the flat dp = node*dp device order, and
+        # expert-last matches the flat dp = dp*ep order, so hierarchical
+        # and expert plans reproduce the flat plan's trajectory exactly
         batch_axes = tuple(self.extra_dp_axes)
         if self.node > 1:
             batch_axes += (self.node_axis,)
-        if batch_axes:
+        if batch_axes or self.ep > 1:
             batch_axes += (self.data_axis,)
+            if self.ep > 1:
+                batch_axes += (self.expert_axis,)
             rules = rules.with_overrides(
                 batch=batch_axes, cache_batch=batch_axes,
-                name=rules.name + "+hier_dp")
+                name=rules.name + ("+ep" if self.ep > 1 else "+hier_dp"))
+        if self.ep > 1:
+            # expert weights move from the data axis (the ep==1 fallback,
+            # where "expert parallelism" is just dp-sharded experts) onto
+            # their own mesh axis; dispatch is the all-to-all between the
+            # composite batch sharding and this one (models/moe.py)
+            rules = rules.with_overrides(name=rules.name,
+                                         experts=self.expert_axis)
         if self.rule_overrides:
             rules = rules.with_overrides(**dict(self.rule_overrides))
         return rules
@@ -301,9 +324,31 @@ def build_train_step(model: Model, opt_cfg: AdamWConfig, plan: ParallelPlan,
                              "(the comm executor binds sharding specs)")
         _pshapes, _psh, _, _ = plan_state_shardings(model, mesh, plan)
         comm_exec = qc.CommExec(cp, mesh, _pshapes, _psh)
+
+    # ExpertPlan executor (models/moe.py:ExpertDispatch): ep > 1 hands the
+    # MoE blocks the mesh + axis names so dispatch/combine become the pair
+    # of GSPMD sharding constraints that lower to the token all-to-all.
+    # ep == 1 passes nothing — the expert rules resolve to the pre-EP
+    # data-axis sharding and the step is byte-identical to before.
+    ep_ctx = None
+    if plan.ep > 1:
+        epl.validate_experts(model.cfg.n_experts, plan.ep,
+                             where=f"ParallelPlan(ep={plan.ep}) on "
+                                   f"{model.cfg.name}")
+        if mesh is None:
+            raise ValueError("ep > 1 requires the mesh at build time "
+                             "(the dispatch binds sharding constraints)")
+        group_axes = tuple(plan.extra_dp_axes)
+        if plan.node > 1:
+            group_axes += (plan.node_axis,)
+        group_axes += (plan.data_axis,)
+        ep_ctx = moe_mod.ExpertDispatch(mesh=mesh,
+                                        expert_axis=plan.expert_axis,
+                                        group_axes=group_axes)
     model = Model(model.cfg, policy.compute_dtype, model.q_chunk,
                   compute=compute,
-                  comm=comm_exec.layer_comm if comm_exec else None)
+                  comm=comm_exec.layer_comm if comm_exec else None,
+                  ep=ep_ctx)
     # pp > 1 folds all gas microbatches into one pipelined backward pass
     outer_gas = 1 if plan.pp > 1 else plan.gas
 
@@ -346,15 +391,17 @@ def build_train_step(model: Model, opt_cfg: AdamWConfig, plan: ParallelPlan,
             lambda p: jnp.zeros(p.shape, jnp.float32), params))
 
         def accum(carry, mb):
-            gsum, ce_sum, aux_sum = carry
+            gsum, ce_sum, aux_sum, drop_sum = carry
             (_, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, mb, scale)
             gsum = constrain_gsum(jax.tree.map(
                 lambda a, g: a + g.astype(jnp.float32), gsum, grads))
-            return (gsum, ce_sum + metrics["ce"], aux_sum + metrics["moe_aux"]), None
+            return (gsum, ce_sum + metrics["ce"], aux_sum + metrics["moe_aux"],
+                    drop_sum + metrics["moe_drop"]), None
 
-        (gsum, ce_sum, aux_sum), _ = jax.lax.scan(
-            accum, (zero_grads, jnp.float32(0.0), jnp.float32(0.0)), micro)
+        (gsum, ce_sum, aux_sum, drop_sum), _ = jax.lax.scan(
+            accum, (zero_grads, jnp.float32(0.0), jnp.float32(0.0),
+                    jnp.float32(0.0)), micro)
 
         grads = prec.unscale_grads(state["loss_scale"],
                                    jax.tree.map(lambda g: g / outer_gas, gsum))
@@ -365,6 +412,10 @@ def build_train_step(model: Model, opt_cfg: AdamWConfig, plan: ParallelPlan,
         metrics = {
             "loss": ce_sum / outer_gas,
             "moe_aux": aux_sum / outer_gas,
+            # measured router drop fraction (capacity truncation is never
+            # silent — dryrun/bench report it next to the analytic
+            # expertplan.predicted_drop_fraction); 0.0 for expert-less models
+            "moe_drop": drop_sum / outer_gas,
             "grads_finite": finite,
             "loss_scale": new_ls["scale"],
         }
@@ -394,7 +445,8 @@ def jit_train_step(model: Model, opt_cfg: AdamWConfig, plan: ParallelPlan,
     state_sh = _state_sharding_dict(mesh, psh, opt_sh)
     batch_sh = batch_shardings(model.cfg, global_batch, seq_len, mesh, plan)
     rep = replicated(mesh)
-    metrics_sh = {"loss": rep, "moe_aux": rep, "grads_finite": rep, "loss_scale": rep}
+    metrics_sh = {"loss": rep, "moe_aux": rep, "moe_drop": rep,
+                  "grads_finite": rep, "loss_scale": rep}
     return jax.jit(
         step,
         in_shardings=(state_sh, batch_sh),

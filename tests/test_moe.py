@@ -19,7 +19,8 @@ def test_dropless_matches_dense_expert_sum():
     """With huge capacity, MoE == explicitly computing each token's expert."""
     cfg, params = _setup(top_k=2)
     x = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
-    out, _ = moe.moe_block(params, x, cfg)
+    out, _, drop = moe.moe_block(params, x, cfg)
+    assert float(drop) == 0.0  # huge capacity: nothing truncated
 
     # dense reference
     from repro.models import layers
@@ -47,9 +48,11 @@ def test_dropless_matches_dense_expert_sum():
 def test_capacity_drops_tokens():
     cfg, params = _setup(top_k=1, cf=0.25)  # tight capacity
     x = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
-    out, aux = moe.moe_block(params, x, cfg)
+    out, aux, drop = moe.moe_block(params, x, cfg)
     assert out.shape == x.shape and bool(jnp.all(jnp.isfinite(out)))
     assert float(aux) > 0
+    # cf=0.25 must truncate — and the truncation is measured, not silent
+    assert 0.0 < float(drop) <= 1.0
 
 
 def test_uniform_router_aux_loss_is_one():
@@ -68,5 +71,5 @@ def test_uniform_router_aux_loss_is_one():
 def test_decode_path_single_group():
     cfg, params = _setup(top_k=1)
     x = 0.3 * jax.random.normal(jax.random.PRNGKey(2), (4, 1, cfg.d_model))
-    out, _ = moe.moe_block(params, x, cfg)
+    out, _, _ = moe.moe_block(params, x, cfg)
     assert out.shape == x.shape and bool(jnp.all(jnp.isfinite(out)))

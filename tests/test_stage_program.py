@@ -222,7 +222,8 @@ def test_model_stage_programs_declare_family_carries():
 
     m = Model(get_config("llama4-maverick-400b-a17b").reduced(), jnp.float32)
     prog = m.stage_program(m.init(jax.random.PRNGKey(0)))
-    assert [c.name for c in prog.carry_spec] == ["aux"]
+    assert [c.name for c in prog.carry_spec] == ["aux", "moe_drop"]
+    assert all(c.kind == sp.ACCUM for c in prog.carry_spec)
 
     m = Model(get_config("seamless-m4t-medium").reduced(), jnp.float32)
     prog = m.stage_program(m.init(jax.random.PRNGKey(0)))
