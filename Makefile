@@ -17,10 +17,14 @@
 #                 devices, with measured-vs-predicted token all-to-all
 #                 bytes + router drop fractions; writes + validates
 #                 BENCH_moe.json
+#   make trace  - telemetry-instrumented pp=2 x v=2 train run on 4 virtual
+#                 devices; writes telemetry.jsonl + trace.json (Chrome
+#                 about://tracing / Perfetto) and checks the trace's
+#                 measured idle fraction against the analytic wave bubble
 
 PY := python
 
-.PHONY: test lint smoke bench bench-pp bench-comm bench-moe
+.PHONY: test lint smoke bench bench-pp bench-comm bench-moe trace
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -57,3 +61,12 @@ bench-moe:
 	    --out BENCH_moe.json
 	PYTHONPATH=src $(PY) benchmarks/bench_moe.py \
 	    --validate BENCH_moe.json
+
+trace:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+	$(PY) -m repro.launch.train --arch yi-6b --reduced --layers 4 \
+	    --dp 2 --pp 2 --virtual-stages 2 --gas 4 --steps 3 \
+	    --global-batch 8 --seq-len 32 --log-every 1 \
+	    --log-jsonl telemetry.jsonl --trace trace.json
+	PYTHONPATH=src $(PY) -m repro.analysis.trace --check trace.json
+	PYTHONPATH=src $(PY) -m repro.analysis.report --telemetry telemetry.jsonl

@@ -1,4 +1,12 @@
-"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived)."""
+"""Benchmark utilities: timing, CSV emission, shared BENCH record schema.
+
+The BENCH_*.json writers share the telemetry record conventions
+(``core/telemetry.py``): :func:`run_config` builds the one config block
+every validator checks (``kernels_interpret_mode == (backend == "cpu")``
+is the machine-readable CPU-interpret caveat), and :func:`point_fields`
+merges the telemetry throughput accounting (tokens/s, analytic model
+FLOPs, MFU) into a timed point.
+"""
 import time
 
 import numpy as np
@@ -7,6 +15,27 @@ import numpy as np
 def emit(name: str, us_per_call: float | None, derived: str) -> None:
     us = "" if us_per_call is None else f"{us_per_call:.1f}"
     print(f"{name},{us},{derived}")
+
+
+def run_config(**extra) -> dict:
+    """The shared BENCH config block: device count, backend, and the
+    machine-readable ``kernels_interpret_mode`` flag (kernels=True points
+    ran the Pallas kernels in interpret mode when the backend is cpu) —
+    one construction site instead of one copy per bench writer."""
+    import jax
+    backend = jax.default_backend()
+    return {"devices": jax.device_count(), "backend": backend,
+            "kernels_interpret_mode": backend == "cpu", **extra}
+
+
+def point_fields(cfg, global_batch: int, seq_len: int, wall_s: float,
+                 n_devices: int) -> dict:
+    """Telemetry throughput fields for one timed bench point (thin bridge
+    to ``core/telemetry.py:step_fields`` so BENCH artifacts carry the same
+    tokens/s + MFU accounting as live train records)."""
+    from repro.core import telemetry
+    return telemetry.step_fields(cfg, global_batch, seq_len, wall_s,
+                                 n_devices)
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:

@@ -212,13 +212,11 @@ def run_bench(args) -> dict:
                   f"(compile {compile_s:.1f}s) loss0 {losses[0]:.5f} "
                   f"drop {drop_meas:.4f}{extra}")
 
-    backend = jax.default_backend()
+    import _util
     return {
-        "config": {"seq_len": args.seq_len,
-                   "global_batch": args.global_batch, "steps": args.steps,
-                   "devices": n_dev, "backend": backend,
-                   "precision": "fp32",
-                   "kernels_interpret_mode": backend == "cpu"},
+        "config": _util.run_config(
+            seq_len=args.seq_len, global_batch=args.global_batch,
+            steps=args.steps, precision="fp32"),
         "points": points,
     }
 

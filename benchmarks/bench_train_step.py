@@ -13,7 +13,9 @@ policies can be compared *at verified-identical training math*.
 Schema (validated by ``--validate``, wired into ``make bench``):
 
   {"config": {arch, d_model, n_layers, seq_len, global_batch, steps, devices,
-              backend, precision, kernels_interpret_mode},
+              backend, precision, kernels_interpret_mode},   # _util.run_config
+   # each point also carries the telemetry accounting fields
+   # (flops_per_step, tflops_per_device, mfu, machine — core/telemetry.py)
    "points": [{"plan": {dp, tp, pp, gas, zero}, "remat": str, "kernels": bool,
                "compile_s": float, "wall_s_per_step": float,
                "tokens_per_s": float, "losses": [float, ...]}, ...]}
@@ -44,7 +46,9 @@ import os
 import sys
 
 POINT_KEYS = {"plan", "remat", "kernels", "compile_s", "wall_s_per_step",
-              "tokens_per_s", "losses"}
+              "tokens_per_s", "losses",
+              # telemetry accounting (core/telemetry.py:step_fields)
+              "flops_per_step", "tflops_per_device", "mfu", "machine"}
 PLAN_KEYS = {"dp", "tp", "pp", "gas", "zero"}
 LOSS_TOL = 1e-4
 
@@ -75,6 +79,7 @@ def validate(path: str) -> None:
         assert PLAN_KEYS <= set(p["plan"]), p["plan"]
         assert p["remat"] in ("full", "selective", "none"), p["remat"]
         assert p["wall_s_per_step"] > 0 and len(p["losses"]) >= 2, p
+        assert p["flops_per_step"] > 0 and 0.0 <= p["mfu"] <= 1.0, p
 
     def key(p):
         return (tuple(sorted(p["plan"].items())), bool(p["kernels"]))
@@ -200,6 +205,7 @@ def run_bench(args) -> dict:
             walls.append(time.perf_counter() - t0)
             losses.append(float(m["loss"]))
         wall = float(np.min(walls))  # min-of-N: least-interference estimate
+        import _util
         return {
             "plan": {"dp": plan.dp, "tp": plan.tp, "pp": plan.pp,
                      "gas": plan.gas, "zero": plan.zero},
@@ -207,8 +213,12 @@ def run_bench(args) -> dict:
             "kernels": plan.kernels,
             "compile_s": round(compile_s, 3),
             "wall_s_per_step": round(wall, 5),
-            "tokens_per_s": round(args.global_batch * args.seq_len / wall, 1),
             "losses": losses,
+            # telemetry accounting (core/telemetry.py:step_fields):
+            # tokens_per_s + analytic model FLOPs + MFU, same fields as the
+            # live train records
+            **_util.point_fields(cfg, args.global_batch, args.seq_len,
+                                 wall, n_dev),
         }
 
     points = []
@@ -222,16 +232,12 @@ def run_bench(args) -> dict:
                   f"{rec['tokens_per_s']:>10,.0f} tok/s "
                   f"(compile {rec['compile_s']:.1f}s) loss0 {rec['losses'][0]:.5f}")
 
-    backend = jax.default_backend()
+    import _util
     return {
-        "config": {"arch": args.arch, "d_model": args.d_model,
-                   "n_layers": args.n_layers, "seq_len": args.seq_len,
-                   "global_batch": args.global_batch, "steps": args.steps,
-                   "devices": n_dev, "backend": backend,
-                   "precision": args.precision,
-                   # machine-readable CPU caveat: kernels=True points ran
-                   # the Pallas kernels in interpret mode on this backend
-                   "kernels_interpret_mode": backend == "cpu"},
+        "config": _util.run_config(
+            arch=args.arch, d_model=args.d_model, n_layers=args.n_layers,
+            seq_len=args.seq_len, global_batch=args.global_batch,
+            steps=args.steps, precision=args.precision),
         "points": points,
     }
 

@@ -68,6 +68,39 @@ def hillclimb_table() -> str:
     return "\n".join(lines)
 
 
+def telemetry_table(path: str) -> str:
+    """Render a per-step table from a telemetry JSONL stream
+    (``core/telemetry.py`` schema: one ``compile`` record, then ``step``
+    records carrying tokens/s, MFU, and the costmodel drift block)."""
+    recs = [json.loads(l) for l in open(path) if l.strip()]
+    head = next((r for r in recs if r.get("kind") == "compile"), None)
+    lines = []
+    if head is not None:
+        lines.append(
+            f"telemetry: {head.get('arch','?')} plan={head.get('plan')} "
+            f"gb={head.get('global_batch')} seq={head.get('seq_len')} "
+            f"devices={head.get('devices')} backend={head.get('backend')}")
+        lines.append("")
+    lines += [
+        "| step | wall | tokens/s | TFLOP/s/dev | MFU | loss | drift |",
+        "|---:|---:|---:|---:|---:|---:|---:|",
+    ]
+    for r in recs:
+        if r.get("kind") != "step":
+            continue
+        d = r.get("drift") or {}
+        ratio = d.get("rolling_ratio", d.get("step_time_ratio"))
+        drift = "—" if ratio is None else (
+            f"{ratio:.2f}x" + (" ⚠" if d.get("warn") else ""))
+        loss = r.get("loss")
+        lines.append(
+            f"| {r['step']} | {_fmt_s(r['wall_s'])} | "
+            f"{r['tokens_per_s']:,.0f} | {r['tflops_per_device']:.3f} | "
+            f"{r['mfu']*100:.2f}% | "
+            f"{'—' if loss is None else f'{loss:.4f}'} | {drift} |")
+    return "\n".join(lines)
+
+
 def inject() -> None:
     with open("EXPERIMENTS.md") as f:
         text = f.read()
@@ -81,8 +114,13 @@ def inject() -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--inject", action="store_true")
+    ap.add_argument("--telemetry", metavar="JSONL", default=None,
+                    help="render a step/MFU/drift table from a telemetry "
+                         "JSONL (launch/train.py --log-jsonl output)")
     args = ap.parse_args()
-    if args.inject:
+    if args.telemetry:
+        print(telemetry_table(args.telemetry))
+    elif args.inject:
         inject()
     else:
         print(roofline_table())

@@ -196,6 +196,11 @@ class Prediction:
     # approximation; 0.0 for dense models) — validated against the measured
     # ``moe_drop`` train metric in benchmarks/bench_moe.py
     moe_drop: float = 0.0
+    # predicted per-device collective payload bytes per step, split by
+    # mesh axis ({tp, ep, pp, dp, zero3_gather, total}) — the analytic
+    # anchor the telemetry drift monitor compares against the measured
+    # ``analysis/hlo.py:comm_bytes`` of the compiled module
+    comm_bytes: dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def objective(self) -> float:
@@ -233,11 +238,19 @@ def predict(model: GPTSize, cfg: ParallelCfg, machine: Machine = FRONTIER) -> Pr
         t_attn_mem = 40.0 * score_bytes * layers_per_stage / machine.hbm_bw
         t_comp = t_comp / 0.88
 
+    # per-device wire payloads per step, split by mesh axis — the analytic
+    # side of the telemetry drift monitor (validated against the measured
+    # analysis/hlo.py:comm_bytes of the compiled module)
+    cbytes = {"tp": 0.0, "ep": 0.0, "pp": 0.0, "dp": 0.0, "zero3_gather": 0.0}
+    ticks_sched = m + p - 1
+
     # ---------------- TP collective ----------------
     if t > 1:
         ar_vol = mbs * s * d * 2.0                      # activation, bf16/fp16
         ar_time = 2.0 * (t - 1) / t * ar_vol / machine.tp_bandwidth(t)
         t_tp = 4.0 * layers_per_stage * ar_time        # 2 fwd + 2 bwd per layer
+        cbytes["tp"] = ticks_sched * 4.0 * layers_per_stage \
+            * 2.0 * (t - 1) / t * ar_vol
     else:
         t_tp = 0.0
 
@@ -254,6 +267,8 @@ def predict(model: GPTSize, cfg: ParallelCfg, machine: Machine = FRONTIER) -> Pr
         # slots each, capacity-factor headroom, d wide, bf16 wire
         a2a_vol = cfg.capacity_factor * mbs * s * cfg.top_k * d * 2.0
         t_ep = 4.0 * layers_per_stage * (e - 1) / e * a2a_vol / machine.intranode_bw
+        cbytes["ep"] = ticks_sched * 4.0 * layers_per_stage \
+            * (e - 1) / e * a2a_vol
         moe_drop = expertplan.predicted_drop_fraction(
             cfg.top_k, cfg.n_experts, cfg.capacity_factor, mbs * s)
     else:
@@ -266,6 +281,7 @@ def predict(model: GPTSize, cfg: ParallelCfg, machine: Machine = FRONTIER) -> Pr
     if p > 1:
         pp_vol = mbs * s * d * 2.0
         t_pp = 2.0 * 2.0 * pp_vol / machine.internode_bw   # fwd act + bwd grad
+        cbytes["pp"] = ticks_sched * 2.0 * 2.0 * pp_vol
     else:
         t_pp = 0.0
 
@@ -293,6 +309,15 @@ def predict(model: GPTSize, cfg: ParallelCfg, machine: Machine = FRONTIER) -> Pr
             inter = (nn - 1) / nn * (vol / r) / dp_bw * contention
             return intra + inter
 
+        def dp_vol_bytes(vol: float) -> float:
+            """Wire bytes per device for one data-group collective of
+            ``vol`` logical bytes (ring payload; hierarchical plans move
+            the intra-node fraction plus the 1/dp node-local shard)."""
+            if nn == 1:
+                return (R - 1) / R * vol
+            intra = (r - 1) / r * vol if r > 1 else 0.0
+            return intra + (nn - 1) / nn * (vol / r)
+
         # qcomm wire discount: int8 payload + one fp32 scale per block,
         # relative to the 2-byte (bf16/fp16) wire format billed above
         q_itemsize = (commplan.QUANT_ITEMSIZE
@@ -309,8 +334,10 @@ def predict(model: GPTSize, cfg: ParallelCfg, machine: Machine = FRONTIER) -> Pr
             halves = m + (1.0 if z == 2 else 0.0)
             g_disc = q_discount if cfg.qcomm == "both" else 1.0
             t_dp = halves * dp_time(grad_vol * g_disc) * 1.05
+            cbytes["dp"] = halves * dp_vol_bytes(grad_vol * g_disc)
         else:
             t_dp = 2.0 * dp_time(grad_vol)
+            cbytes["dp"] = 2.0 * dp_vol_bytes(grad_vol)
             if z >= 1:
                 t_dp *= 1.05  # reduce-scatter + param all-gather ~ same volume
         if z >= 3:
@@ -322,6 +349,7 @@ def predict(model: GPTSize, cfg: ParallelCfg, machine: Machine = FRONTIER) -> Pr
             if cfg.qcomm in ("gather", "both"):
                 param_vol *= q_discount
             t_gather = gathers * dp_time(param_vol)
+            cbytes["zero3_gather"] = gathers * dp_vol_bytes(param_vol)
             if cfg.overlap:
                 # per-segment prefetch hides gathers behind the GEMM
                 # stream; only the residual past total compute is billed
@@ -374,6 +402,7 @@ def predict(model: GPTSize, cfg: ParallelCfg, machine: Machine = FRONTIER) -> Pr
             "t_dp": t_dp, "t_opt": t_opt,
         },
         moe_drop=moe_drop,
+        comm_bytes={**cbytes, "total": sum(cbytes.values())},
         mem_breakdown={
             "params": mem_params, "grads": mem_grads, "opt": mem_opt,
             "act": mem_act, "zero": float(z),
@@ -453,6 +482,169 @@ def calibrate_bandwidths(samples: Sequence[tuple[float, float, float]],
     return dataclasses.replace(
         machine, intranode_bw=bw_intra,
         internode_bw=bw_inter * machine.gpus_per_node)
+
+
+# ---------------------------------------------------------------------------
+# Analytic per-family model FLOPs (telemetry's MFU numerator)
+# ---------------------------------------------------------------------------
+#
+# MFU convention (the paper's "GPU throughput" percentages): *model* FLOPs —
+# 6 flops per matmul parameter per token (fwd 2, bwd 4; the remat replay
+# forward is excluded, so this is MFU, not HFU), the attention quadratic
+# billed non-causally at 4*T*T_kv*heads*head_dim per layer forward (x3 with
+# backward — exactly the 2*factor*s^2*d term ``predict`` prices), and an
+# explicit recurrent-scan term for the attention-free token mixers (RWKV
+# wkv state, Mamba selective scan) so MFU is meaningful for all families.
+# Embedding lookup is a gather (0 flops); the logits matmul is counted
+# (once, when ``tie_embeddings`` reuses the embed matrix).
+
+
+@dataclasses.dataclass(frozen=True)
+class StepFlops:
+    """Analytic model FLOPs of one optimizer step (whole job, all devices)."""
+    matmul: float       # every >=2D parameter leaf, active (top_k/E) for MoE
+    attn: float         # softmax-attention quadratic (self + cross + encoder)
+    scan: float         # recurrent token mixing (rwkv wkv / mamba ssm scan)
+    tokens: int         # decoder-stream tokens per step (gbs * seq)
+
+    @property
+    def total(self) -> float:
+        return self.matmul + self.attn + self.scan
+
+    @property
+    def per_token(self) -> float:
+        return self.total / max(self.tokens, 1)
+
+
+def _matmul_param_split(cfg) -> dict[str, float]:
+    """Active matmul parameters per token stream: {"decoder", "encoder"}.
+
+    Walks the declarative spec tree (same idiom as
+    ``analysis/roofline.py:param_counts``): >=2D leaves are matmuls (vectors
+    — norms, biases, decays — are O(d) elementwise, not billed); expert
+    leaves are weighted by the routed top_k/E active fraction; the hybrid
+    family's weight-tied "shared" block is billed once per application
+    (n_layers // hybrid_attn_every); the encoder subtree is split out so
+    its params are billed at encoder tokens, not decoder tokens.
+    """
+    # lazy imports: core/ must not depend on models/ at module scope
+    import jax as _jax
+    from repro.models.common import is_spec
+    from repro.models.model import Model
+
+    specs = Model(cfg).param_specs()
+    flat, _ = _jax.tree_util.tree_flatten_with_path(specs, is_leaf=is_spec)
+    n_shared_apps = (cfg.n_layers // cfg.hybrid_attn_every
+                     if cfg.family == "hybrid" and cfg.hybrid_attn_every
+                     else 1)
+    dec = enc = 0.0
+    for path, spec in flat:
+        if len(spec.shape) < 2:
+            continue
+        n = float(np.prod(spec.shape))
+        keys = [str(getattr(p, "key", p)) for p in path]
+        if "experts" in spec.axes:
+            n *= max(cfg.top_k, 1) / max(cfg.n_experts, 1)
+        if keys[0] == "embed" and not cfg.tie_embeddings:
+            continue    # pure lookup; the untied lm_head is its own leaf
+        if keys[0] == "shared":
+            n *= n_shared_apps
+        if keys[0] == "encoder":
+            enc += n
+        else:
+            dec += n
+    return {"decoder": dec, "encoder": enc}
+
+
+def train_step_flops(cfg, global_batch: int, seq_len: int,
+                     *, backward: bool = True) -> StepFlops:
+    """Per-family analytic model FLOPs of one train step (all devices).
+
+    ``cfg`` is a ``repro.models.common.ModelConfig`` (any family);
+    ``backward=False`` gives the forward-only (prefill) count.  Invariant
+    under the parallel plan — dividing by (step time x devices x peak)
+    yields MFU regardless of (dp, tp, pp, ep, gas).
+    """
+    per_param = 6.0 if backward else 2.0   # fwd 2 + bwd 4 per matmul param
+    mult = per_param / 2.0                 # fwd multiplier for attn/scan
+    B, s = global_batch, seq_len
+    fam = cfg.family
+    h, hd, d = cfg.n_heads, cfg.resolved_head_dim, cfg.d_model
+
+    # token streams: the decoder stack sees text (+ prepended vision
+    # patches for vlm); the encdec encoder sees enc_seq_len frames
+    s_stream = s + (cfg.num_patches if fam == "vlm" else 0)
+    dec_tokens = B * s_stream
+    enc_tokens = B * cfg.enc_seq_len if cfg.is_encdec else 0
+
+    mm = _matmul_param_split(cfg)
+    matmul = per_param * (mm["decoder"] * dec_tokens
+                          + mm["encoder"] * enc_tokens)
+
+    # softmax-attention quadratic: 4*Tq*Tkv*h*hd fwd per layer per sequence
+    t_kv = min(s_stream, cfg.sliding_window) if cfg.sliding_window else s_stream
+    if fam in ("dense", "moe", "vlm", "audio"):
+        n_self, n_cross, n_enc = cfg.n_layers, 0, 0
+    elif fam == "encdec":
+        n_self, n_cross, n_enc = cfg.n_layers, cfg.n_layers, cfg.enc_layers
+    elif fam == "hybrid":
+        n_self = (cfg.n_layers // cfg.hybrid_attn_every
+                  if cfg.hybrid_attn_every else 0)
+        n_cross = n_enc = 0
+    else:                                   # ssm / rwkv: attention-free
+        n_self = n_cross = n_enc = 0
+    attn = mult * 4.0 * B * h * hd * (
+        n_self * s_stream * t_kv
+        + n_cross * s * cfg.enc_seq_len
+        + n_enc * cfg.enc_seq_len ** 2)
+
+    # recurrent token mixing (linear in T): per-token fwd cost of carrying
+    # the per-layer state — rwkv wkv outer-product update/read over the
+    # (heads, hd, hd) state, mamba selective scan over (d_inner, ssm_state)
+    if fam == "rwkv":
+        scan_per_tok = 4.0 * d * hd
+        n_scan = cfg.n_layers
+    elif fam in ("ssm", "hybrid"):
+        from repro.models.ssm import d_inner   # lazy (core -> models)
+        scan_per_tok = 6.0 * d_inner(cfg) * max(cfg.ssm_state, 1)
+        n_scan = cfg.n_layers
+    else:
+        scan_per_tok, n_scan = 0.0, 0
+    scan = mult * dec_tokens * n_scan * scan_per_tok
+
+    return StepFlops(matmul=matmul, attn=attn, scan=scan, tokens=B * s)
+
+
+def plan_parallel_cfg(cfg, plan, global_batch: int,
+                      seq_len: int) -> ParallelCfg:
+    """Map an executor plan (``runtime/train_loop.py:ParallelPlan`` or any
+    duck-typed equivalent) onto the analytic :class:`ParallelCfg`."""
+    data_ways = plan.dp * plan.ep * plan.node
+    mbs = max(1, global_batch // (plan.gas * data_ways))
+    return ParallelCfg(
+        tp=plan.tp, pp=plan.pp, mbs=mbs, gas=plan.gas, dp=plan.dp,
+        zero=plan.zero, node=plan.node, qcomm=plan.qcomm,
+        overlap=plan.overlap, comm_block=plan.comm_block,
+        checkpoint_activations=plan.remat != "none",
+        ep=plan.ep, n_experts=cfg.n_experts, top_k=max(cfg.top_k, 1),
+        capacity_factor=cfg.capacity_factor)
+
+
+def predict_step(cfg, plan, global_batch: int, seq_len: int,
+                 machine: Machine = FRONTIER) -> Prediction:
+    """Costmodel prediction for an actual (ModelConfig, ParallelPlan) run.
+
+    The drift-monitor anchor: builds the analytic :class:`GPTSize` /
+    :class:`ParallelCfg` pair from the real model config and executor plan
+    and prices it with :func:`predict`.  For non-GPT families the size
+    mapping is structural (layers/width/heads) — the measured-over-
+    predicted ratio the telemetry records carry *is* the calibration
+    signal ``calibrate_bandwidths`` and the auto-planner consume.
+    """
+    size = GPTSize(name=cfg.name, n_layers=cfg.n_layers, d_model=cfg.d_model,
+                   n_heads=cfg.n_heads, vocab=cfg.padded_vocab, seq=seq_len)
+    return predict(size, plan_parallel_cfg(cfg, plan, global_batch, seq_len),
+                   machine)
 
 
 # ---------------------------------------------------------------------------

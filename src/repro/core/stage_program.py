@@ -176,10 +176,12 @@ def run_program(program: StageProgram, x: jax.Array, carry: dict,
                     if k + 1 < chunks:
                         nxt = comm.gather(
                             jax.tree.map(lambda a, _k=k: a[_k + 1], split))
-                    (x, carry), _ = jax.lax.scan(body, (x, carry), cur)
+                    with jax.named_scope(f"stage_scan.{seg.name}"):
+                        (x, carry), _ = jax.lax.scan(body, (x, carry), cur)
                 continue
             params = comm.gather(params)
-        (x, carry), _ = jax.lax.scan(body, (x, carry), params)
+        with jax.named_scope(f"stage_scan.{seg.name}"):
+            (x, carry), _ = jax.lax.scan(body, (x, carry), params)
     return x, carry
 
 
@@ -236,9 +238,10 @@ def split_stages(program: StageProgram, n_stages: int,
 
         def stage_fn(sp_slice, payload):
             carry = {k: v for k, v in payload.items() if k != "x"}
-            (x, carry), _ = jax.lax.scan(
-                _scan_body(seg, program.cast, policy),
-                (payload["x"], carry), sp_slice)
+            with jax.named_scope(f"stage_scan.{seg.name}"):
+                (x, carry), _ = jax.lax.scan(
+                    _scan_body(seg, program.cast, policy),
+                    (payload["x"], carry), sp_slice)
             return {"x": x, **carry}
 
         return sp, stage_fn
@@ -287,7 +290,8 @@ def split_stages(program: StageProgram, n_stages: int,
         it = iter(sp_slice)
         for j in range(k):
             params_j = ref[j].params if ref[j].tied else next(it)
-            (x, carry), _ = jax.lax.scan(bodies[j], (x, carry), params_j)
+            with jax.named_scope(f"stage_scan.{ref[j].name}"):
+                (x, carry), _ = jax.lax.scan(bodies[j], (x, carry), params_j)
         return {"x": x, **carry}
 
     return sp, stage_fn

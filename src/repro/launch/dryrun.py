@@ -28,8 +28,10 @@ from repro.analysis import roofline as rl
 from repro.configs import ASSIGNED, get_config
 from repro.configs.shapes import SHAPES, InputShape, applicable
 from repro.core import compute as cmp
+from repro.core import costmodel as cm
 from repro.core import expertplan as epl
 from repro.core import sharding as shd
+from repro.core import telemetry as tel
 from repro.launch.mesh import make_production_mesh, mesh_for_plan
 from repro.models import moe as moe_mod
 from repro.models.common import axes_tree, shape_dtype_tree
@@ -99,7 +101,8 @@ def lower_step(arch: str, shape_name: str, *, multi_pod: bool,
     # path the record claims (train shapes get it via jit_train_step anyway)
     model = Model(cfg, jnp.bfloat16, q_chunk=q_chunk,
                   compute=plan.compute_policy())
-    meta = {"arch": arch, "shape": shape_name, "chips": chips,
+    meta = {"schema": tel.SCHEMA,
+            "arch": arch, "shape": shape_name, "chips": chips,
             "mesh": mesh_name,
             "kind": shape.kind,
             "plan": plan.rules + (f"+zero{plan.zero}" if plan.zero else ""),
@@ -125,6 +128,17 @@ def lower_step(arch: str, shape_name: str, *, multi_pod: bool,
         # bytes at >= 2, parameter bytes at 3; sits next to XLA's measured
         # peak in the record
         meta["state_bytes"] = train_state_bytes(model, mesh, plan)
+        # the telemetry record schema's analytic side (core/telemetry.py):
+        # family-aware model FLOPs + the costmodel prediction this shape
+        # would drift against if it ran — lowered-only runs emit the same
+        # blocks a live train's records carry
+        meta["flops_per_step"] = cm.train_step_flops(
+            cfg, shape.global_batch, shape.seq_len).total
+        try:
+            meta["predicted"] = tel.predicted_block(cm.predict_step(
+                cfg, plan, shape.global_batch, shape.seq_len))
+        except Exception:
+            meta["predicted"] = {}
         if cfg.family == "moe":
             # predicted (ExpertPlan's normal approximation) vs measured
             # (Monte-Carlo over the real router) capacity-overflow drop —
@@ -342,8 +356,7 @@ def main() -> None:
                 records.append(rec)
                 if args.out:
                     with open(args.out, "a") as f:
-                        rec2 = {k: v for k, v in rec.items() if k != "traceback"}
-                        f.write(json.dumps(rec2) + "\n")
+                        f.write(json.dumps(tel.sanitize_record(rec)) + "\n")
     n_ok = sum(r["status"] == "ok" for r in records)
     n_skip = sum(r["status"] == "skipped" for r in records)
     n_err = sum(r["status"] == "error" for r in records)

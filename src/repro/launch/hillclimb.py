@@ -16,6 +16,7 @@ import dataclasses
 import json
 
 from repro.configs import get_config
+from repro.core.telemetry import sanitize_record
 from repro.launch.dryrun import dryrun_one, default_plan
 
 # the three chosen pairs: most collective-bound / worst useful-flops ratio /
@@ -178,13 +179,13 @@ def run_variant(pair: str, variant: str, out: str | None = None) -> dict:
     rec["note"] = spec["note"]
     if out and rec.get("status") == "ok":
         with open(out, "a") as f:
-            f.write(json.dumps({k: v for k, v in rec.items()
-                                if k != "traceback"}) + "\n")
+            f.write(json.dumps(sanitize_record(rec)) + "\n")
     elif out:
         with open(out, "a") as f:
-            f.write(json.dumps({"pair": pair, "variant": variant,
-                                "status": rec.get("status"),
-                                "error": rec.get("error")}) + "\n")
+            f.write(json.dumps(sanitize_record(
+                {"pair": pair, "variant": variant,
+                 "status": rec.get("status"),
+                 "error": rec.get("error")})) + "\n")
     return rec
 
 

@@ -16,6 +16,7 @@ devices via XLA_FLAGS), with reduced configs for smoke-scale runs.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -24,11 +25,13 @@ import numpy as np
 
 from repro.checkpointing import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import ASSIGNED, PAPER, get_config
+from repro.core import telemetry
 from repro.data import SyntheticCorpus, make_batch_iterator
 from repro.launch.mesh import mesh_for_plan
 from repro.models.model import Model
 from repro.optim import AdamWConfig, cosine_schedule
-from repro.runtime.train_loop import ParallelPlan, init_train_state, jit_train_step
+from repro.runtime.train_loop import (ParallelPlan, init_train_state,
+                                      jit_train_step, train_state_bytes)
 
 
 def parse_plan(args, n_devices: int) -> ParallelPlan:
@@ -121,17 +124,37 @@ def main() -> None:
                          "dispatch; requires n_experts %% ep == 0")
     ap.add_argument("--virtual-stages", type=int, default=1,
                     help="interleaved virtual stages per pipe rank (pp > 1)")
+    ap.add_argument("--layers", type=int, default=None,
+                    help="override n_layers (with --reduced, lifts the "
+                         "2-layer clamp so pp * virtual_stages > 2 plans "
+                         "have enough stage units)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-jsonl", default=None, metavar="PATH",
+                    help="append one telemetry record per step "
+                         "(core/telemetry.py schema: tokens/s, MFU, drift)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the "
+                         "pipeline schedule against measured step times "
+                         "(analysis/trace.py; view at chrome://tracing)")
+    ap.add_argument("--machine", choices=sorted(telemetry.MACHINES),
+                    default="frontier",
+                    help="MFU denominator / costmodel drift anchor")
+    ap.add_argument("--drift-threshold", type=float, default=10.0,
+                    help="warn when the rolling measured/predicted "
+                         "step-time ratio leaves [1/x, x]")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         # ep-aware clamp: the reduced expert count must stay divisible
         # by the plan's expert ways (no-op for ep=1 / non-moe families)
-        cfg = cfg.reduced(ep=args.ep)
+        overrides = {"n_layers": args.layers} if args.layers else {}
+        cfg = cfg.reduced(ep=args.ep, **overrides)
+    elif args.layers:
+        cfg = dataclasses.replace(cfg, n_layers=args.layers)
     n_dev = jax.device_count()
     plan = parse_plan(args, n_dev)
     # --kernels is fully fused on every family now: rmsnorm + layernorm,
@@ -170,19 +193,55 @@ def main() -> None:
         seq_len=args.seq_len, global_batch=args.global_batch,
         extra_specs={k: (sh, np.dtype(dt)) for k, (sh, dt) in extra.items()} or None)
 
+    # telemetry rides every run (records stay in memory unless --log-jsonl);
+    # the MFU console suffix appears only when telemetry output was asked
+    # for, keeping the documented default step-line format byte-identical
+    tele_on = bool(args.log_jsonl or args.trace)
+    tele = telemetry.Telemetry(
+        cfg, plan, args.global_batch, args.seq_len, machine=args.machine,
+        jsonl=args.log_jsonl,
+        # the drift warning only fires on runs that asked for telemetry
+        # output — a smoke run on this CPU container always drifts hugely
+        # and the default console should stay as quiet as before
+        drift_threshold=args.drift_threshold if tele_on else float("inf"))
+
+    # AOT compile: one .lower().compile() captures the measured collective
+    # payload bytes + XLA's peak estimate for the compile record, and the
+    # loop below calls the compiled step directly (no second compilation)
     t0 = time.time()
+    batch = next(it)
+    compiled = step_fn.lower(state, batch).compile()
+    tele.record_compile(
+        compiled, state_bytes=train_state_bytes(model, mesh, plan),
+        compile_s=time.time() - t0)
+
     for i in range(start, args.steps):
-        state, metrics = step_fn(state, next(it))
+        (state, metrics), wall = telemetry.timed_call(compiled, state, batch)
+        rec = tele.step(i + 1, wall, metrics)
         if (i + 1) % args.log_every == 0:
-            dt = time.time() - t0
-            tok_s = args.global_batch * args.seq_len * args.log_every / dt
-            print(f"step {i+1:5d} loss {float(metrics['loss']):.4f} "
-                  f"scale {float(metrics['loss_scale']):.0f} "
-                  f"{tok_s:,.0f} tok/s")
-            t0 = time.time()
+            print(tele.console_line(rec, window=args.log_every,
+                                    with_mfu=tele_on))
         if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
             save_checkpoint(args.ckpt_dir, i + 1, state)
-    print("done.")
+        batch = next(it)
+
+    if args.trace:
+        from repro.analysis import trace as trace_mod
+        tr = trace_mod.build_trace(
+            plan.pp, plan.gas, plan.virtual_stages, tele.step_walls,
+            meta={"arch": cfg.name, "plan": telemetry.plan_dict(plan)})
+        trace_mod.write_trace(tr, args.trace)
+        print(f"wrote pipeline trace to {args.trace} "
+              f"({len(tr['traceEvents'])} events)")
+    tele.close()
+    walls = tele.step_walls
+    if walls:
+        med = sorted(walls)[len(walls) // 2]
+        print(f"done. median step {med * 1e3:.1f} ms, "
+              f"mfu {100.0 * telemetry.mfu(tele.flops.total, med, plan.n_devices, tele.machine.peak_flops):.2f}% "
+              f"({tele.machine.name})")
+    else:
+        print("done.")
 
 
 if __name__ == "__main__":

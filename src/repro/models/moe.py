@@ -66,14 +66,16 @@ class ExpertDispatch:
     def dispatch(self, t: jax.Array) -> jax.Array:
         """(G, E, C, d) group-major -> expert-major (the token all-to-all)."""
         spec = P(self.group_axes, self.expert_axis, None, None)
-        return jax.lax.with_sharding_constraint(
-            t, NamedSharding(self.mesh, spec))
+        with jax.named_scope("ep_all_to_all.dispatch"):
+            return jax.lax.with_sharding_constraint(
+                t, NamedSharding(self.mesh, spec))
 
     def combine(self, t: jax.Array) -> jax.Array:
         """(G, E, C, d) expert-major -> group-major (the inverse all-to-all)."""
         spec = P(self.group_axes + (self.expert_axis,), None, None, None)
-        return jax.lax.with_sharding_constraint(
-            t, NamedSharding(self.mesh, spec))
+        with jax.named_scope("ep_all_to_all.combine"):
+            return jax.lax.with_sharding_constraint(
+                t, NamedSharding(self.mesh, spec))
 
 
 def moe_specs(cfg: ModelConfig) -> dict:

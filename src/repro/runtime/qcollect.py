@@ -236,4 +236,5 @@ class LayerComm:
             return jax.lax.with_sharding_constraint(
                 leaf, _named(self.mesh, gathered))
 
-        return jax.tree.map(one, tree, self._info)
+        with jax.named_scope("weight_gather"):
+            return jax.tree.map(one, tree, self._info)

@@ -406,6 +406,12 @@ def build_train_step(model: Model, opt_cfg: AdamWConfig, plan: ParallelPlan,
         grads = prec.unscale_grads(state["loss_scale"],
                                    jax.tree.map(lambda g: g / outer_gas, gsum))
         finite = prec.all_finite(grads)
+        # global fp32 L2 norm of the unscaled gradient — the telemetry
+        # record's training-health signal (sum-of-squares over sharded
+        # leaves reduces correctly under GSPMD)
+        grad_norm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
         new_params, new_opt = adamw_update(
             opt_cfg, params, grads, state["opt"], skip=~finite)
         new_ls = prec.update_loss_scale(state["loss_scale"], finite)
@@ -416,6 +422,7 @@ def build_train_step(model: Model, opt_cfg: AdamWConfig, plan: ParallelPlan,
             # silent — dryrun/bench report it next to the analytic
             # expertplan.predicted_drop_fraction); 0.0 for expert-less models
             "moe_drop": drop_sum / outer_gas,
+            "grad_norm": grad_norm,
             "grads_finite": finite,
             "loss_scale": new_ls["scale"],
         }
@@ -446,7 +453,7 @@ def jit_train_step(model: Model, opt_cfg: AdamWConfig, plan: ParallelPlan,
     batch_sh = batch_shardings(model.cfg, global_batch, seq_len, mesh, plan)
     rep = replicated(mesh)
     metrics_sh = {"loss": rep, "moe_aux": rep, "moe_drop": rep,
-                  "grads_finite": rep, "loss_scale": rep}
+                  "grad_norm": rep, "grads_finite": rep, "loss_scale": rep}
     return jax.jit(
         step,
         in_shardings=(state_sh, batch_sh),
