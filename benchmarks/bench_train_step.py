@@ -16,9 +16,14 @@ Schema (validated by ``--validate``, wired into ``make bench``):
               backend, precision, kernels_interpret_mode},   # _util.run_config
    # each point also carries the telemetry accounting fields
    # (flops_per_step, tflops_per_device, mfu, machine — core/telemetry.py)
-   "points": [{"plan": {dp, tp, pp, gas, zero}, "remat": str, "kernels": bool,
-               "compile_s": float, "wall_s_per_step": float,
+   "points": [{"arch": str, "plan": {dp, tp, pp, gas, zero}, "remat": str,
+               "kernels": bool, "compile_s": float, "wall_s_per_step": float,
                "tokens_per_s": float, "losses": [float, ...]}, ...]}
+
+Besides the main (dense) matrix, the scan families ride along: zamba2
+(mamba2 SSD) and rwkv6 (wkv) run kernels=False vs kernels=True on the base
+dp plan — the fused Pallas chunk-scan points — and the validator asserts
+each such pair shares one loss trajectory per (arch, plan, remat).
 
 The ``zero`` plan key is the ZeRO stage (core/memplan.py); with more than
 one device the base dp plan is swept over stages 0..3 at remat=full, and the
@@ -81,14 +86,18 @@ def validate(path: str) -> None:
         assert p["wall_s_per_step"] > 0 and len(p["losses"]) >= 2, p
         assert p["flops_per_step"] > 0 and 0.0 <= p["mfu"] <= 1.0, p
 
+    def arch_of(p):
+        return p.get("arch", rec["config"]["arch"])
+
     def key(p):
-        return (tuple(sorted(p["plan"].items())), bool(p["kernels"]))
+        return (arch_of(p), tuple(sorted(p["plan"].items())),
+                bool(p["kernels"]))
 
     by_plan: dict = {}
     for p in rec["points"]:
         by_plan.setdefault(key(p), {})[p["remat"]] = p
     checked = False
-    for (plan, kernels), modes in by_plan.items():
+    for (arch, plan, kernels), modes in by_plan.items():
         if "full" not in modes:
             continue
         ref = modes["full"]["losses"]
@@ -96,7 +105,7 @@ def validate(path: str) -> None:
             drift = max(abs(a - b) for a, b in zip(p["losses"], ref))
             assert drift <= LOSS_TOL, (
                 f"remat={mode} loss trajectory drifts {drift:.2e} from full "
-                f"(plan={dict(plan)}, kernels={kernels})")
+                f"(arch={arch}, plan={dict(plan)}, kernels={kernels})")
         base_plan = dict(plan)["gas"] == 1 and dict(plan)["pp"] == 1
         if not kernels and base_plan and "selective" in modes:
             full_w = modes["full"]["wall_s_per_step"]
@@ -111,7 +120,8 @@ def validate(path: str) -> None:
     # points differing only in plan["zero"] must share a loss trajectory
     by_zero: dict = {}
     for p in rec["points"]:
-        k = (tuple(sorted((a, b) for a, b in p["plan"].items() if a != "zero")),
+        k = (arch_of(p),
+             tuple(sorted((a, b) for a, b in p["plan"].items() if a != "zero")),
              p["remat"], bool(p["kernels"]))
         by_zero.setdefault(k, []).append(p)
     zero_groups = 0
@@ -127,9 +137,32 @@ def validate(path: str) -> None:
                 f"{drift:.2e} from zero={pts[0]['plan']['zero']} ({k})")
     if rec["config"]["devices"] > 1:
         assert zero_groups >= 1, "no multi-stage zero group to validate"
+
+    # kernel-fusion invariant: kernels=True never changes the training math —
+    # points differing only in "kernels" must share a loss trajectory (this
+    # is what promotes the fused SSD/wkv scan points past correctness)
+    by_kern: dict = {}
+    for p in rec["points"]:
+        k = (arch_of(p), tuple(sorted(p["plan"].items())), p["remat"])
+        by_kern.setdefault(k, {})[bool(p["kernels"])] = p
+    kernel_pairs = 0
+    for k, d in by_kern.items():
+        if True not in d or False not in d:
+            continue
+        kernel_pairs += 1
+        drift = max(abs(a - b)
+                    for a, b in zip(d[True]["losses"], d[False]["losses"]))
+        assert drift <= LOSS_TOL, (
+            f"kernels=True loss trajectory drifts {drift:.2e} from the jnp "
+            f"path ({k})")
+    if any(p["kernels"] for p in rec["points"]):
+        assert kernel_pairs >= 1, "no kernels=True/False pair to validate"
+        scan_archs = {arch_of(p) for p in rec["points"] if p["kernels"]}
+        assert len(scan_archs) >= 2, (
+            f"expected scan-family kernels points, got {scan_archs}")
     print(f"{path}: schema + invariants OK "
           f"({len(rec['points'])} points, {zero_groups} zero-equivalence "
-          f"groups)")
+          f"groups, {kernel_pairs} kernel-equivalence pairs)")
 
 
 def run_bench(args) -> dict:
@@ -187,10 +220,10 @@ def run_bench(args) -> dict:
                 for remat in ("full", "selective"):
                     yield dataclasses.replace(plan, remat=remat, kernels=True)
 
-    def bench_point(plan):
+    def bench_point(plan, bmodel, bcfg, arch):
         mesh = mesh_for_plan(plan)
-        state = init_train_state(model, jax.random.PRNGKey(0), opt, plan)
-        step = jit_train_step(model, opt, plan, mesh,
+        state = init_train_state(bmodel, jax.random.PRNGKey(0), opt, plan)
+        step = jit_train_step(bmodel, opt, plan, mesh,
                               args.global_batch, args.seq_len)
         t0 = time.perf_counter()
         state, m = step(state, batches[0])
@@ -207,6 +240,7 @@ def run_bench(args) -> dict:
         wall = float(np.min(walls))  # min-of-N: least-interference estimate
         import _util
         return {
+            "arch": arch,
             "plan": {"dp": plan.dp, "tp": plan.tp, "pp": plan.pp,
                      "gas": plan.gas, "zero": plan.zero},
             "remat": plan.remat,
@@ -217,20 +251,44 @@ def run_bench(args) -> dict:
             # telemetry accounting (core/telemetry.py:step_fields):
             # tokens_per_s + analytic model FLOPs + MFU, same fields as the
             # live train records
-            **_util.point_fields(cfg, args.global_batch, args.seq_len,
+            **_util.point_fields(bcfg, args.global_batch, args.seq_len,
                                  wall, n_dev),
         }
+
+    def show(rec, p, arch):
+        print(f"{arch:14s} "
+              f"plan(dp={p.dp},tp={p.tp},pp={p.pp},gas={p.gas},zero={p.zero}) "
+              f"remat={p.remat:9s} kernels={int(p.kernels)} | "
+              f"{rec['wall_s_per_step']*1e3:8.2f} ms/step "
+              f"{rec['tokens_per_s']:>10,.0f} tok/s "
+              f"(compile {rec['compile_s']:.1f}s) loss0 {rec['losses'][0]:.5f}")
 
     points = []
     for plan in plans:
         for p in points_for(plan):
-            rec = bench_point(p)
+            rec = bench_point(p, model, cfg, args.arch)
             points.append(rec)
-            print(f"plan(dp={p.dp},tp={p.tp},pp={p.pp},gas={p.gas},zero={p.zero}) "
-                  f"remat={p.remat:9s} kernels={int(p.kernels)} | "
-                  f"{rec['wall_s_per_step']*1e3:8.2f} ms/step "
-                  f"{rec['tokens_per_s']:>10,.0f} tok/s "
-                  f"(compile {rec['compile_s']:.1f}s) loss0 {rec['losses'][0]:.5f}")
+            show(rec, p, args.arch)
+
+    # scan-family rows: the fused SSD (zamba2/mamba2) and wkv (rwkv6) chunk
+    # scans vs their jnp paths — kernels=False/True on the base dp plan at
+    # remat=full; the validator asserts each pair shares one loss trajectory
+    if not args.no_kernels:
+        import dataclasses
+        for arch in ("zamba2-2.7b", "rwkv6-1.6b"):
+            fam_kw = dict(n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+                          d_ff=256, vocab_size=256, head_dim=32)
+            if arch.startswith("zamba"):
+                fam_kw["hybrid_attn_every"] = 2
+            fam_cfg = get_config(arch).reduced(**fam_kw)
+            fam_model = Model(fam_cfg, jnp.float32 if args.precision == "fp32"
+                              else jnp.bfloat16)
+            for kernels in (False, True):
+                p = dataclasses.replace(plans[0], remat="full",
+                                        kernels=kernels)
+                rec = bench_point(p, fam_model, fam_cfg, arch)
+                points.append(rec)
+                show(rec, p, arch)
 
     import _util
     return {

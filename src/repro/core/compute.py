@@ -28,9 +28,12 @@ Two knobs:
     recompute is what keeps the O(Sq x Skv) scores / (N, V) logits from
     ever materializing, which no remat mode should undo.
   * ``kernels`` — route norm (rmsnorm + layernorm) / MLP gate (swiglu +
-    gelu) / attention / cross-entropy through the fused Pallas kernels in
+    gelu) / attention / cross-entropy / grouped expert MLP / the chunked
+    SSD (mamba2) and wkv (rwkv) scans through the fused Pallas kernels in
     ``repro.kernels`` (interpret-mode on CPU, Mosaic on TPU) instead of
-    the jnp reference formulations.
+    the jnp reference formulations.  The decode path follows the same
+    flag: single-token SSD/wkv state updates run the fused
+    ``mamba_decode_step`` / ``wkv_decode_step`` kernels.
 """
 from __future__ import annotations
 

@@ -112,6 +112,62 @@ def gelu_mlp_in(x: jax.Array, w1: jax.Array,
     return out.reshape(*shape[:-1], w1.shape[1])
 
 
+def ssd_scan(x: jax.Array, dt: jax.Array, Bm: jax.Array, Cm: jax.Array,
+             A_log: jax.Array, *, chunk: int,
+             interpret: bool | None = None):
+    """Fused mamba2 chunked SSD scan: x (B, T, H, P), dt (B, T, H),
+    Bm/Cm (B, T, N), A_log (H,) -> (y (B, T, H, P), state (B, H, P, N)
+    fp32).  ``chunk`` must divide T (pick via ``tiling.pick_chunk``);
+    differentiable."""
+    from repro.kernels import ssd_scan as ssd
+    if interpret is None:
+        interpret = _on_cpu()
+    return ssd.ssd_scan(x, dt, Bm, Cm, A_log, chunk=chunk,
+                        interpret=interpret)
+
+
+def wkv_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, state: jax.Array, *, chunk: int,
+             interpret: bool | None = None):
+    """Fused rwkv chunked wkv scan: r/k/w (B, T, H, K), v (B, T, H, V),
+    u (H, K), state (B, H, K, V) -> (y (B, T, H, V) fp32, final state).
+    All operands are computed in fp32 (matching the reference recurrence);
+    ``chunk`` must divide T; differentiable."""
+    from repro.kernels import wkv_scan as wkv
+    if interpret is None:
+        interpret = _on_cpu()
+    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    return wkv.wkv_scan(f32(r), f32(k), f32(v), f32(w), f32(u), f32(state),
+                        chunk=chunk, interpret=interpret)
+
+
+def mamba_decode_step(window: jax.Array, conv_w: jax.Array, conv_b: jax.Array,
+                      dt_raw: jax.Array, dt_bias: jax.Array, A_log: jax.Array,
+                      D: jax.Array, state: jax.Array, *, n_heads: int,
+                      head_dim: int, interpret: bool | None = None):
+    """Fused single-token mamba decode chain (conv window -> gate -> state
+    update -> read-out): window (B, K, ch), state (B, H, P, N) fp32 ->
+    (y (B, H, P) fp32, new state).  Serving path only (no vjp)."""
+    from repro.kernels import ssd_scan as ssd
+    if interpret is None:
+        interpret = _on_cpu()
+    return ssd.mamba_decode_step(window, conv_w, conv_b, dt_raw, dt_bias,
+                                 A_log, D, state, n_heads=n_heads,
+                                 head_dim=head_dim, interpret=interpret)
+
+
+def wkv_decode_step(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                    u: jax.Array, state: jax.Array,
+                    interpret: bool | None = None):
+    """Fused single-token rwkv time-mix core step: r/k/w (B, H, K) fp32,
+    v (B, H, V) fp32, u (H, K), state (B, H, K, V) fp32 ->
+    (out (B, H, V) fp32, new state).  Serving path only (no vjp)."""
+    from repro.kernels import wkv_scan as wkv
+    if interpret is None:
+        interpret = _on_cpu()
+    return wkv.wkv_decode_step(r, k, v, w, u, state, interpret=interpret)
+
+
 def grouped_mlp(x: jax.Array, w1: jax.Array, w3: jax.Array | None,
                 w2: jax.Array, mask: jax.Array, act: str = "swiglu",
                 interpret: bool | None = None) -> jax.Array:

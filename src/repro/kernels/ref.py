@@ -89,6 +89,131 @@ def grouped_mlp_ref(x: jax.Array, w1: jax.Array, w3: jax.Array | None,
     return out.astype(x.dtype)
 
 
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, Bm: jax.Array, Cm: jax.Array,
+                 A_log: jax.Array, *, chunk: int):
+    """Chunked mamba2 SSD scan oracle — mirrors ``models/ssm.py:_ssd_chunked``
+    (fp32 accumulation, zero initial state, checkpointed chunk body).  Also
+    the backward recompute of the Pallas kernel's ``custom_vjp``.
+
+    x: (B, T, H, P); dt: (B, T, H); Bm/Cm: (B, T, N); A_log: (H,).
+    Returns (y (B, T, H, P) in x.dtype, final state (B, H, P, N) fp32)."""
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = T // chunk
+    logA = -jnp.exp(A_log.astype(jnp.float32))          # (H,)
+
+    def reshape_c(a):
+        return a.reshape(Bsz, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    xs = (reshape_c(x), reshape_c(dt), reshape_c(Bm), reshape_c(Cm))
+    state0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+
+    def body(state, xs_c):
+        xc, dtc, Bc, Cc = xs_c
+        xc32 = xc.astype(jnp.float32)
+        la = dtc.astype(jnp.float32) * logA              # (B, Q, H)
+        cum = jnp.cumsum(la, axis=1)                     # inclusive
+        total = cum[:, -1]                               # (B, H)
+        Gsc = jnp.einsum("bin,bjn->bij", Cc.astype(jnp.float32),
+                         Bc.astype(jnp.float32))
+        gap = cum[:, :, None, :] - cum[:, None, :, :]
+        L = jnp.exp(jnp.where(tri[None, :, :, None] > 0, gap, -jnp.inf))
+        W = Gsc[..., None] * L * dtc.astype(jnp.float32)[:, None, :, :]
+        y = jnp.einsum("bijh,bjhp->bihp", W, xc32)
+        y = y + jnp.einsum("bin,bhpn->bihp", Cc.astype(jnp.float32), state) \
+            * jnp.exp(cum)[..., None]
+        decay_rem = jnp.exp(total[:, None, :] - cum)     # (B, Q, H)
+        new_state = jnp.exp(total)[:, :, None, None] * state + jnp.einsum(
+            "bjh,bjn,bjhp->bhpn", dtc.astype(jnp.float32) * decay_rem,
+            Bc.astype(jnp.float32), xc32)
+        return new_state, y
+
+    state, ys = jax.lax.scan(jax.checkpoint(body), state0, xs)
+    y = ys.swapaxes(0, 1).reshape(Bsz, T, H, P)
+    return y.astype(x.dtype), state
+
+
+def wkv_scan_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                 u: jax.Array, state: jax.Array, *, chunk: int):
+    """Chunked rwkv wkv scan oracle — mirrors ``models/rwkv.py:_wkv_chunked``
+    (log-space decays, bonus current-token term, checkpointed chunk body).
+    Also the backward recompute of the Pallas kernel's ``custom_vjp``.
+
+    r/k/w: (B, T, H, K); v: (B, T, H, V); u: (H, K); state: (B, H, K, V).
+    Returns (y (B, T, H, V) fp32, final state (B, H, K, V) fp32)."""
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    nc = T // chunk
+    lw = jnp.log(w)                                        # (B,T,H,K), < 0
+
+    def re(a):
+        return a.reshape(B, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    rs, ks, vs, lws = re(r), re(k), re(v), re(lw)
+    tri_lt = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)  # i < t
+
+    def body(S, xs):
+        rc, kc, vc, lwc = xs                               # (B,C,H,*)
+        cum = jnp.cumsum(lwc, axis=1)                      # inclusive
+        cum_prev = jnp.concatenate(
+            [jnp.zeros_like(cum[:, :1]), cum[:, :-1]], axis=1)
+        rd = rc * jnp.exp(cum_prev)
+        y = jnp.einsum("bthk,bhkv->bthv", rd, S)
+        gap = cum_prev[:, :, None] - cum[:, None, :, :, :]
+        gap = jnp.where(tri_lt[None, :, :, None, None] > 0, gap, -jnp.inf)
+        score = jnp.einsum("bthk,bihk,btihk->btih", rc, kc, jnp.exp(gap))
+        y = y + jnp.einsum("btih,bihv->bthv", score, vc)
+        y = y + jnp.einsum("bthk,bthv->bthv", rc * (u[None, None] * kc), vc)
+        total = cum[:, -1]                                 # (B,H,K)
+        rem = jnp.exp(total[:, None] - cum)                # (B,C,H,K)
+        S_new = jnp.exp(total)[..., None] * S + jnp.einsum(
+            "bihk,bihv->bhkv", kc * rem, vc)
+        return S_new, y
+
+    state, ys = jax.lax.scan(jax.checkpoint(body), state, (rs, ks, vs, lws))
+    return ys.swapaxes(0, 1).reshape(B, T, H, V), state
+
+
+def mamba_decode_ref(window: jax.Array, conv_w: jax.Array, conv_b: jax.Array,
+                     dt_raw: jax.Array, dt_bias: jax.Array, A_log: jax.Array,
+                     D: jax.Array, state: jax.Array, *, n_heads: int,
+                     head_dim: int):
+    """Single-token mamba decode chain oracle — the conv-window + state
+    einsum chain of ``models/ssm.py:mamba_decode``.
+
+    window: (B, K, ch) with ch = H*P + 2N; conv_w: (K, ch); conv_b: (ch,);
+    dt_raw/dt_bias/A_log/D: (B, H)/(H,)/(H,)/(H,); state: (B, H, P, N) fp32.
+    Returns (y (B, H, P) fp32, new state (B, H, P, N) fp32)."""
+    B = window.shape[0]
+    H, P = n_heads, head_dim
+    di = H * P
+    N = state.shape[-1]
+    conv_out = jnp.einsum("bkc,kc->bc", window, conv_w) + conv_b
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + dt_bias.astype(jnp.float32))
+    xh = xin.reshape(B, H, P).astype(jnp.float32)
+    a = jnp.exp(dt * -jnp.exp(A_log.astype(jnp.float32)))    # (B, H)
+    state = a[:, :, None, None] * state + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), state)
+    y = y + D.astype(jnp.float32)[None, :, None] * xh
+    return y, state
+
+
+def wkv_decode_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                   u: jax.Array, state: jax.Array):
+    """Single-step rwkv time-mix core oracle — ``models/rwkv.py:_time_mix_core``.
+
+    r/k/w: (B, H, K); v: (B, H, V); u: (H, K); state: (B, H, K, V) fp32.
+    Returns (out (B, H, V) fp32, new state (B, H, K, V) fp32)."""
+    kv = k[..., :, None] * v[..., None, :]                      # (B,H,K,V)
+    out = jnp.einsum("bhk,bhkv->bhv", r, state + u[None][..., :, None] * kv)
+    new_state = w[..., :, None] * state + kv
+    return out, new_state
+
+
 def cross_entropy_ref(h: jax.Array, w: jax.Array, labels: jax.Array,
                       valid_vocab: int | None = None) -> jax.Array:
     """Mean CE with full logits materialized (the oracle)."""

@@ -1,0 +1,205 @@
+"""Mamba-2 chunked SSD scan + fused single-token decode as Pallas kernels.
+
+Train/prefill kernel: grid (B, H, nc) with the chunk index minor-most, so
+the length-nc recurrence over chunks runs sequentially per (batch, head)
+while the (H, P, N) state lives in VMEM scratch — the intra-chunk work is
+two MXU matmuls (the (Q x Q) masked decay attention and its (Q x P) apply)
+plus the (P x N) state outer product, exactly the chunk structure of the
+jnp reference ``models/ssm.py:_ssd_chunked`` / ``kernels/ref.py:
+ssd_scan_ref`` (fp32 accumulation, zero initial state).
+
+Differentiable via ``custom_vjp`` in the grouped-MLP idiom: the forward
+saves only the inputs and the backward recomputes the chunked scan in fp32
+through ``jax.vjp`` over the reference — numerically the grads of the same
+chunk algebra, and memory-equivalent to the reference's per-chunk remat.
+
+Decode kernel: one fused step over the rolling conv window + softplus(dt)
+gate + state update + read-out of ``models/ssm.py:mamba_decode`` — the
+whole non-matmul chain of the serving inner loop in one kernel launch.
+It mirrors the jnp einsum chain op-for-op so interpret mode reproduces
+the reference decode bitwise; no vjp (serving only).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref
+
+
+def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, la_ref, y_ref, st_ref, s_ref,
+                 *, nc: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    xc = x_ref[0, :, 0, :].astype(jnp.float32)            # (Q, P)
+    dtc = dt_ref[0].astype(jnp.float32)                   # (Q, 1)
+    Bc = b_ref[0].astype(jnp.float32)                     # (Q, N)
+    Cc = c_ref[0].astype(jnp.float32)                     # (Q, N)
+    logA = la_ref[0, 0]                                   # scalar, fp32
+
+    Q = xc.shape[0]
+    la = dtc * logA                                       # (Q, 1)
+    cum = jnp.cumsum(la, axis=0)                          # inclusive, (Q, 1)
+    total = cum[-1:, :]                                   # (1, 1)
+
+    # intra-chunk: W[i, j] = (C_i . B_j) exp(cum_i - cum_j) dt_j  (j <= i)
+    Gsc = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (Q, Q)
+    row = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    gap = cum - cum.reshape(1, Q)                         # cum_i - cum_j
+    L = jnp.exp(jnp.where(row >= col, gap, -jnp.inf))
+    W = Gsc * L * dtc.reshape(1, Q)
+    y = jax.lax.dot_general(W, xc, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (Q, P)
+
+    # inter-chunk: contribution of the carried state
+    S = s_ref[...]                                        # (P, N)
+    y = y + jax.lax.dot_general(Cc, S, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) \
+        * jnp.exp(cum)
+
+    # state update: S' = exp(total) S + sum_j dt_j exp(total - cum_j) x_j B_j
+    xw = xc * (dtc * jnp.exp(total - cum))                # (Q, P)
+    S_new = jnp.exp(total) * S + jax.lax.dot_general(
+        xw, Bc, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (P, N)
+    s_ref[...] = S_new
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _finish():
+        st_ref[0, 0] = S_new
+
+
+def _fwd_pallas(x, dt, Bm, Cm, A_log, *, chunk: int, interpret: bool):
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = T // chunk
+    logA = -jnp.exp(A_log.astype(jnp.float32)).reshape(H, 1)
+    y, state = pl.pallas_call(
+        functools.partial(_scan_kernel, nc=nc),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[
+            # VMEM recurrent state carried across the nc chunk loop
+            pltpu.VMEM((P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, Bm, Cm, logA)
+    return y, state
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _ssd(x, dt, Bm, Cm, A_log, chunk, interpret):
+    return _fwd_pallas(x, dt, Bm, Cm, A_log, chunk=chunk, interpret=interpret)
+
+
+def _ssd_fwd(x, dt, Bm, Cm, A_log, chunk, interpret):
+    return _ssd(x, dt, Bm, Cm, A_log, chunk, interpret), (x, dt, Bm, Cm, A_log)
+
+
+def _ssd_bwd(chunk, interpret, res, g):
+    x, dt, Bm, Cm, A_log = res
+    _, vjp = jax.vjp(
+        lambda *a: ref.ssd_scan_ref(*a, chunk=chunk), x, dt, Bm, Cm, A_log)
+    return vjp(g)
+
+
+_ssd.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, Bm: jax.Array, Cm: jax.Array,
+             A_log: jax.Array, *, chunk: int,
+             interpret: bool = False):
+    """x: (B, T, H, P); dt: (B, T, H); Bm/Cm: (B, T, N); A_log: (H,).
+    Returns (y (B, T, H, P) in x.dtype, final state (B, H, P, N) fp32).
+    Differentiable (backward recomputes via ``ref.ssd_scan_ref``)."""
+    assert x.shape[1] % chunk == 0, (x.shape, chunk)
+    return _ssd(x, dt, Bm, Cm, A_log, chunk, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-token decode
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(w_ref, cw_ref, cb_ref, dtr_ref, dtb_ref, la_ref, d_ref,
+                   s_ref, y_ref, so_ref, *, n_heads: int, head_dim: int):
+    H, P = n_heads, head_dim
+    di = H * P
+    window = w_ref[...]                                   # (1, K, ch)
+    conv_out = jnp.einsum("bkc,kc->bc", window, cw_ref[...]) + cb_ref[0]
+    conv_out = jax.nn.silu(conv_out)
+    N = (conv_out.shape[-1] - di) // 2
+    xin, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dtr_ref[...].astype(jnp.float32)
+                         + dtb_ref[0].astype(jnp.float32))  # (1, H)
+    xh = xin.reshape(1, H, P).astype(jnp.float32)
+    a = jnp.exp(dt * -jnp.exp(la_ref[0].astype(jnp.float32)))  # (1, H)
+    state = a[:, :, None, None] * s_ref[...] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), state)
+    y = y + d_ref[0].astype(jnp.float32)[None, :, None] * xh
+    y_ref[...] = y
+    so_ref[...] = state
+
+
+def mamba_decode_step(window, conv_w, conv_b, dt_raw, dt_bias, A_log, D,
+                      state, *, n_heads: int, head_dim: int,
+                      interpret: bool = False):
+    """Fused mamba decode chain: conv window -> silu -> softplus(dt) gate ->
+    state update -> read-out, one kernel launch per step.
+
+    window: (B, K, ch); conv_w: (K, ch); conv_b: (ch,); dt_raw: (B, H);
+    dt_bias/A_log/D: (H,); state: (B, H, P, N) fp32.
+    Returns (y (B, H, P) fp32, new state (B, H, P, N) fp32)."""
+    B, K, ch = window.shape
+    H, P = n_heads, head_dim
+    N = state.shape[-1]
+    # 1D params go in as (1, H)/(1, ch) rows (TPU blocks want >= 2D)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, n_heads=H, head_dim=P),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, K, ch), lambda b: (b, 0, 0)),
+            pl.BlockSpec((K, ch), lambda b: (0, 0)),
+            pl.BlockSpec((1, ch), lambda b: (0, 0)),
+            pl.BlockSpec((1, H), lambda b: (b, 0)),
+            pl.BlockSpec((1, H), lambda b: (0, 0)),
+            pl.BlockSpec((1, H), lambda b: (0, 0)),
+            pl.BlockSpec((1, H), lambda b: (0, 0)),
+            pl.BlockSpec((1, H, P, N), lambda b: (b, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, P), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, H, P, N), lambda b: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(window, conv_w, conv_b.reshape(1, ch), dt_raw,
+      dt_bias.reshape(1, H), A_log.reshape(1, H), D.reshape(1, H), state)

@@ -1,6 +1,20 @@
-"""Shared block-fitting helper for the Pallas kernels: the largest block
-size <= ``block`` that divides ``n`` (Pallas grids need exact tiling)."""
+"""Shared block/chunk-fitting helpers for the Pallas kernels.
+
+``fit_block`` picks the largest block size <= ``block`` that divides ``n``
+(Pallas grids need exact tiling).  ``pick_chunk`` is the shared chunk-size
+heuristic of the two chunked recurrent scans (mamba2 SSD, rwkv wkv): the
+largest power-of-two chunk <= ``target`` dividing T — one definition used
+by both the jnp reference paths in ``models/{ssm,rwkv}.py`` and the Pallas
+chunk-scan kernels, so ``kernels=True`` and the reference path always agree
+on the chunk structure (and therefore on the fp32 summation order of the
+inter-chunk carry).
+"""
 from __future__ import annotations
+
+# chunk targets per scan family: SSD wants MXU-sized (Q x Q) intra-chunk
+# matmuls; wkv's per-channel (Q, Q, K) decay-gap tensor bounds Q lower
+SSD_CHUNK = 128
+WKV_CHUNK = 32
 
 
 def fit_block(block: int, n: int) -> int:
@@ -8,3 +22,14 @@ def fit_block(block: int, n: int) -> int:
     while n % b != 0:
         b -= 1
     return b
+
+
+def pick_chunk(T: int, target: int) -> int:
+    """Largest power-of-two chunk <= min(target, T) that divides T (1 when
+    T is odd)."""
+    c, q = 1, 2
+    while q <= min(target, T):
+        if T % q == 0:
+            c = q
+        q *= 2
+    return c

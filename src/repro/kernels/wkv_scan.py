@@ -1,0 +1,191 @@
+"""RWKV-6 chunked wkv recurrence + fused single-token decode as Pallas kernels.
+
+Train/prefill kernel: grid (B, H, nc) with the chunk index minor-most, so
+the inter-chunk carry runs sequentially per (batch, head) while the
+(K, V) state lives in VMEM scratch.  Per chunk: log-space per-channel
+decays (cumsum of log w), the strictly-causal intra-chunk score tensor
+with the decay gap applied inside the exponent (masked to -inf, so
+exp() never sees future-position deltas), the bonus (current-token)
+``u`` term, and the MXU matmuls against the carried state — the same
+chunk algebra as ``models/rwkv.py:_wkv_chunked`` / ``kernels/ref.py:
+wkv_scan_ref``.
+
+Differentiable via ``custom_vjp`` in the grouped-MLP idiom: forward saves
+only the inputs; backward recomputes through ``jax.vjp`` over the fp32
+reference — memory-equivalent to the reference's per-chunk remat.
+
+Decode kernel: the O(1) time-mix core step (``models/rwkv.py:
+_time_mix_core``) fused into one launch — rank-1 state update ``w*S + k
+v^T`` plus the bonus read-out.  Mirrors the jnp einsums op-for-op so
+interpret mode reproduces the reference decode bitwise; no vjp.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref
+
+
+def _scan_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, st_ref,
+                 s_ref, *, nc: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0]
+
+    rc = r_ref[0, :, 0, :]                                # (Q, K) fp32
+    kc = k_ref[0, :, 0, :]
+    vc = v_ref[0, :, 0, :]                                # (Q, V)
+    wc = w_ref[0, :, 0, :]
+    uc = u_ref[...]                                       # (1, K)
+
+    Q = rc.shape[0]
+    lw = jnp.log(wc)                                      # (Q, K), < 0
+    cum = jnp.cumsum(lw, axis=0)                          # inclusive
+    cum_prev = jnp.concatenate(
+        [jnp.zeros_like(cum[:1]), cum[:-1]], axis=0)      # cum_{t-1}
+    S = s_ref[...]                                        # (K, V)
+
+    # inter-chunk: y_t += (r_t * exp(cum_{t-1})) @ S
+    rd = rc * jnp.exp(cum_prev)
+    y = jax.lax.dot_general(rd, S, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, V)
+
+    # intra-chunk: score_{t,i} = sum_k r_tk k_ik exp(cum_{t-1,k} - cum_{i,k})
+    row = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    gap = cum_prev[:, None, :] - cum[None, :, :]          # (t, i, K)
+    gap = jnp.where((row > col)[:, :, None], gap, -jnp.inf)
+    score = jnp.sum(rc[:, None, :] * kc[None, :, :] * jnp.exp(gap), axis=-1)
+    y = y + jax.lax.dot_general(score, vc, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # bonus (current token) term
+    y = y + jnp.sum(rc * (uc * kc), axis=-1, keepdims=True) * vc
+
+    # state update: S' = diag(exp(total)) S + sum_i exp(total - cum_i) k_i v_i
+    total = cum[-1:, :]                                   # (1, K)
+    kw = kc * jnp.exp(total - cum)                        # (Q, K)
+    S_new = jnp.exp(total).reshape(-1, 1) * S + jax.lax.dot_general(
+        kw, vc, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (K, V)
+    s_ref[...] = S_new
+    y_ref[0, :, 0, :] = y
+
+    @pl.when(ic == nc - 1)
+    def _finish():
+        st_ref[0, 0] = S_new
+
+
+def _fwd_pallas(r, k, v, w, u, state, *, chunk: int, interpret: bool):
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    nc = T // chunk
+    seq_spec = lambda D: pl.BlockSpec((1, chunk, 1, D),  # noqa: E731
+                                      lambda b, h, c: (b, c, h, 0))
+    y, st = pl.pallas_call(
+        functools.partial(_scan_kernel, nc=nc),
+        grid=(B, H, nc),
+        in_specs=[
+            seq_spec(K), seq_spec(K), seq_spec(V), seq_spec(K),
+            pl.BlockSpec((1, K), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec(V),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H, V), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[
+            # VMEM recurrent state carried across the nc chunk loop
+            pltpu.VMEM((K, V), jnp.float32),
+        ],
+        interpret=interpret,
+    )(r, k, v, w, u, state)
+    return y, st
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _wkv(r, k, v, w, u, state, chunk, interpret):
+    return _fwd_pallas(r, k, v, w, u, state, chunk=chunk, interpret=interpret)
+
+
+def _wkv_fwd(r, k, v, w, u, state, chunk, interpret):
+    return (_wkv(r, k, v, w, u, state, chunk, interpret),
+            (r, k, v, w, u, state))
+
+
+def _wkv_bwd(chunk, interpret, res, g):
+    r, k, v, w, u, state = res
+    _, vjp = jax.vjp(
+        lambda *a: ref.wkv_scan_ref(*a, chunk=chunk), r, k, v, w, u, state)
+    return vjp(g)
+
+
+_wkv.defvjp(_wkv_fwd, _wkv_bwd)
+
+
+def wkv_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, state: jax.Array, *, chunk: int,
+             interpret: bool = False):
+    """r/k/w: (B, T, H, K) fp32; v: (B, T, H, V) fp32; u: (H, K);
+    state: (B, H, K, V) fp32.  Returns (y (B, T, H, V) fp32, final state).
+    Differentiable (backward recomputes via ``ref.wkv_scan_ref``)."""
+    assert r.shape[1] % chunk == 0, (r.shape, chunk)
+    return _wkv(r, k, v, w, u, state, chunk, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-token decode
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s_ref, y_ref, so_ref):
+    r = r_ref[...]                                        # (1, H, K)
+    k = k_ref[...]
+    v = v_ref[...]                                        # (1, H, V)
+    w = w_ref[...]
+    u = u_ref[...][None]                                  # (1, H, K)
+    state = s_ref[...]                                    # (1, H, K, V)
+    kv = k[..., :, None] * v[..., None, :]                # (1, H, K, V)
+    out = jnp.einsum("bhk,bhkv->bhv", r, state + u[..., :, None] * kv)
+    y_ref[...] = out
+    so_ref[...] = w[..., :, None] * state + kv
+
+
+def wkv_decode_step(r, k, v, w, u, state, interpret: bool = False):
+    """Fused rwkv time-mix core step (one token).
+
+    r/k/w: (B, H, K) fp32; v: (B, H, V) fp32; u: (H, K) fp32;
+    state: (B, H, K, V) fp32.  Returns (out (B, H, V), new state)."""
+    B, H, K = r.shape
+    V = v.shape[-1]
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, H, K), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, H, K), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, H, V), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, H, K), lambda b: (b, 0, 0)),
+            pl.BlockSpec((H, K), lambda b: (0, 0)),
+            pl.BlockSpec((1, H, K, V), lambda b: (b, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, V), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, H, K, V), lambda b: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, V), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, K, V), jnp.float32),
+        ],
+        interpret=interpret,
+    )(r, k, v, w, u, state)

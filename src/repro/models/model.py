@@ -611,7 +611,7 @@ class Model:
         elif cfg.family == "rwkv":
             def body(x, xs):
                 lp, cl = xs
-                return rwkv.rwkv_decode(lp, x, cl, cfg)
+                return rwkv.rwkv_decode(lp, x, cl, cfg, policy=self.compute)
             x, ncs = jax.lax.scan(body, x, (cparams["layers"], cache["layers"]))
             new_cache["layers"] = ncs
         elif cfg.family == "hybrid":
@@ -628,7 +628,7 @@ class Model:
 
                 def inner(x2, ys):
                     lp, mc = ys
-                    return ssm.mamba_decode(lp, x2, mc, cfg)
+                    return ssm.mamba_decode(lp, x2, mc, cfg, policy=self.compute)
                 x, nmc = jax.lax.scan(inner, x, (lp_group, mc_group))
                 x, nkv = blocks.self_attn_decode(shared["attn"], x, skv, pos_t, cfg)
                 x = blocks.mlp_block(shared["mlp"], x, cfg)

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compute import ComputePolicy, resolve as resolve_policy
+from repro.kernels.tiling import WKV_CHUNK, pick_chunk
 from repro.models import layers
 from repro.models.blocks import norm_spec
 from repro.models.common import ModelConfig, Spec
@@ -81,7 +82,14 @@ def _wkv_chunked(r, k, v, w, u, state, chunk: int,
     step i to output t>i carries decay exp(cum_{t-1} - cum_i) (per channel),
     computed with the max-subtraction trick so exponents stay bounded;
     cross-chunk state carries as in SSD.  Returns (y, final state).
+
+    ``policy.kernels`` routes to the fused Pallas chunk-scan kernel
+    (``kernels/wkv_scan.py``) with the same chunk structure.
     """
+    pol = resolve_policy(policy)
+    if pol.kernels:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.wkv_scan(r, k, v, w, u, state, chunk=chunk)
     B, T, H, K = r.shape
     V = v.shape[-1]
     nc = T // chunk
@@ -107,10 +115,7 @@ def _wkv_chunked(r, k, v, w, u, state, chunk: int,
         score = jnp.einsum("bthk,bihk,btihk->btih", rc, kc, jnp.exp(gap))
         y = y + jnp.einsum("btih,bihv->bthv", score, vc)
         # bonus (current token) term
-        y = y + jnp.einsum("bthk,bthk,bthv->bthv",
-                           rc, jnp.broadcast_to(u, rc.shape[1:])[None] * kc
-                           if False else rc * 0 + u[None, None] * kc, vc)             if False else y + jnp.einsum("bthk,bthv->bthv",
-                                         rc * (u[None, None] * kc), vc)
+        y = y + jnp.einsum("bthk,bthv->bthv", rc * (u[None, None] * kc), vc)
         # state update: S' = diag(exp(total)) S + sum_i exp(total - cum_i) k_i v_i
         total = cum[:, -1]                                 # (B,H,K)
         rem = jnp.exp(total[:, None] - cum)                # (B,C,H,K)
@@ -118,16 +123,8 @@ def _wkv_chunked(r, k, v, w, u, state, chunk: int,
             "bihk,bihv->bhkv", kc * rem, vc)
         return S_new, y
 
-    state, ys = jax.lax.scan(resolve_policy(policy).checkpoint(body),
-                             state, (rs, ks, vs, lws))
+    state, ys = jax.lax.scan(pol.checkpoint(body), state, (rs, ks, vs, lws))
     return ys.swapaxes(0, 1).reshape(B, T, H, V), state
-
-
-def _pick_chunk(T: int, target: int = 32) -> int:
-    for c in (target, 16, 8, 4, 2, 1):
-        if c <= T and T % c == 0:
-            return c
-    return 1
 
 
 def _time_mix_core(r, k, v, w, u, state):
@@ -162,13 +159,21 @@ def time_mix(p: dict, x: jax.Array, x_prev: jax.Array, state: jax.Array,
     if T >= 8:
         outs_bt, state = _wkv_chunked(r, k, v, w, u,
                                       state.astype(jnp.float32),
-                                      _pick_chunk(T), policy=pol)
+                                      pick_chunk(T, WKV_CHUNK), policy=pol)
         y = outs_bt.reshape(B, T, d).astype(x.dtype)
     else:
-        def step(s, inp):
-            rt, kt, vt, wt = inp
-            out, s = _time_mix_core(rt, kt, vt, wt, u[None], s)
-            return s, out
+        if pol.kernels:
+            from repro.kernels import ops as kernel_ops
+
+            def step(s, inp):
+                rt, kt, vt, wt = inp
+                out, s = kernel_ops.wkv_decode_step(rt, kt, vt, wt, u, s)
+                return s, out
+        else:
+            def step(s, inp):
+                rt, kt, vt, wt = inp
+                out, s = _time_mix_core(rt, kt, vt, wt, u[None], s)
+                return s, out
 
         xs = tuple(a.swapaxes(0, 1) for a in (r, k, v, w))       # (T,B,H,K)
         state, outs = jax.lax.scan(step, state.astype(jnp.float32), xs)
@@ -220,10 +225,12 @@ def rwkv_prefill(params: dict, x: jax.Array, cfg: ModelConfig,
     return x, {"x_tm": tm_prev, "x_cm": cm_prev, "state": state}
 
 
-def rwkv_decode(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig):
-    """x: (B, 1, d)."""
+def rwkv_decode(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig,
+                policy: ComputePolicy | None = None):
+    """x: (B, 1, d).  ``policy.kernels`` fuses the time-mix core step into
+    one Pallas kernel (``kernels/wkv_scan.py:wkv_decode_step``)."""
     xo, tm_prev, state = time_mix(
-        params["tm"], x, cache["x_tm"], cache["state"], cfg)
+        params["tm"], x, cache["x_tm"], cache["state"], cfg, policy=policy)
     xo, cm_prev = channel_mix(params["cm"], xo, cache["x_cm"], cfg)
     return xo, {"x_tm": tm_prev, "x_cm": cm_prev, "state": state}
 

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compute import ComputePolicy, resolve as resolve_policy
+from repro.kernels.tiling import SSD_CHUNK, pick_chunk
 from repro.models import layers
 from repro.models.blocks import norm_spec
 from repro.models.common import ModelConfig, Spec
@@ -76,21 +77,20 @@ def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
     return jax.nn.silu(out)
 
 
-def _pick_chunk(T: int, target: int = 128) -> int:
-    for q in (target, 64, 32, 16, 8, 4, 2, 1):
-        if q <= T and T % q == 0:
-            return q
-    return 1
-
-
 def _ssd_chunked(x, dt, Bm, Cm, A_log, *, chunk: int,
                  policy: ComputePolicy | None = None):
     """Chunked SSD scan.
 
     x: (B, T, H, P); dt: (B, T, H); Bm/Cm: (B, T, N); A_log: (H,).
     Returns y (B, T, H, P) and final state (B, H, P, N).  ``policy`` drives
-    the per-chunk rematerialization (default: full remat, the seed policy).
+    the per-chunk rematerialization (default: full remat, the seed policy);
+    ``policy.kernels`` routes the whole scan through the fused Pallas
+    chunk-scan kernel (``kernels/ssd_scan.py``) at the same chunk size.
     """
+    pol = resolve_policy(policy)
+    if pol.kernels:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.ssd_scan(x, dt, Bm, Cm, A_log, chunk=chunk)
     Bsz, T, H, P = x.shape
     N = Bm.shape[-1]
     nc = T // chunk
@@ -126,8 +126,7 @@ def _ssd_chunked(x, dt, Bm, Cm, A_log, *, chunk: int,
             Bc.astype(jnp.float32), xc32)
         return new_state, y
 
-    state, ys = jax.lax.scan(resolve_policy(policy).checkpoint(body),
-                             state0, xs)
+    state, ys = jax.lax.scan(pol.checkpoint(body), state0, xs)
     y = ys.swapaxes(0, 1).reshape(Bsz, T, H, P)
     return y.astype(x.dtype), state
 
@@ -145,8 +144,8 @@ def mamba_block(params: dict, x: jax.Array, cfg: ModelConfig,
     xin, Bm, Cm = _split_xbc(xbc, cfg)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
     xh = xin.reshape(B, T, H, P)
-    y, _ = _ssd_chunked(xh, dt, Bm, Cm, params["A_log"], chunk=_pick_chunk(T),
-                        policy=pol)
+    y, _ = _ssd_chunked(xh, dt, Bm, Cm, params["A_log"],
+                        chunk=pick_chunk(T, SSD_CHUNK), policy=pol)
     y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
     y = y.reshape(B, T, 2 * d)
     y = layers.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.rms_eps)
@@ -203,15 +202,21 @@ def mamba_prefill(params: dict, x: jax.Array, cfg: ModelConfig,
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
     xh = xin.reshape(B, T, H, P)
     y, state = _ssd_chunked(xh, dt, Bm, Cm, params["A_log"],
-                            chunk=_pick_chunk(T), policy=pol)
+                            chunk=pick_chunk(T, SSD_CHUNK), policy=pol)
     y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
     y = y.reshape(B, T, 2 * d)
     y = layers.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.rms_eps)
     return x + y @ params["out_proj"], {"conv": conv_state, "state": state}
 
 
-def mamba_decode(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig):
-    """Single-token decode. x: (B, 1, d); cache: {"conv": (B, K-1, ch), "state": (B,H,P,N)}."""
+def mamba_decode(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig,
+                 policy: ComputePolicy | None = None):
+    """Single-token decode. x: (B, 1, d); cache: {"conv": (B, K-1, ch), "state": (B,H,P,N)}.
+
+    ``policy.kernels`` fuses the conv-window + state-update + read-out
+    chain into one Pallas kernel (``kernels/ssd_scan.py:mamba_decode_step``)
+    that reproduces the jnp einsum chain below op-for-op."""
+    pol = resolve_policy(policy)
     B, _, d = x.shape
     H, P, N = n_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
     K = cfg.conv_kernel
@@ -219,18 +224,25 @@ def mamba_decode(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig):
     z, xbc, dt_raw = _split_proj((h @ params["in_proj"])[:, 0], cfg)  # (B, ...)
     # conv over the rolling window
     window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B, K, ch)
-    conv_out = jnp.einsum("bkc,kc->bc", window, params["conv_w"]) + params["conv_b"]
-    conv_out = jax.nn.silu(conv_out)
     new_conv = window[:, 1:, :]
-    xin, Bm, Cm = _split_xbc(conv_out, cfg)
-    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
-    xh = xin.reshape(B, H, P).astype(jnp.float32)
-    a = jnp.exp(dt * -jnp.exp(params["A_log"].astype(jnp.float32)))    # (B, H)
-    state = cache["state"]
-    state = a[:, :, None, None] * state + jnp.einsum(
-        "bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32), xh)
-    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), state)
-    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    if pol.kernels:
+        from repro.kernels import ops as kernel_ops
+        y, state = kernel_ops.mamba_decode_step(
+            window, params["conv_w"], params["conv_b"], dt_raw,
+            params["dt_bias"], params["A_log"], params["D"], cache["state"],
+            n_heads=H, head_dim=P)
+    else:
+        conv_out = jnp.einsum("bkc,kc->bc", window, params["conv_w"]) + params["conv_b"]
+        conv_out = jax.nn.silu(conv_out)
+        xin, Bm, Cm = _split_xbc(conv_out, cfg)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+        xh = xin.reshape(B, H, P).astype(jnp.float32)
+        a = jnp.exp(dt * -jnp.exp(params["A_log"].astype(jnp.float32)))    # (B, H)
+        state = cache["state"]
+        state = a[:, :, None, None] * state + jnp.einsum(
+            "bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32), xh)
+        y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), state)
+        y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
     y = y.reshape(B, 1, 2 * d).astype(x.dtype)
     y = layers.rms_norm(y * jax.nn.silu(z[:, None, :]), params["norm"], cfg.rms_eps)
     return x + y @ params["out_proj"], {"conv": new_conv, "state": state}
