@@ -17,6 +17,10 @@
 #                 devices, with measured-vs-predicted token all-to-all
 #                 bytes + router drop fractions; writes + validates
 #                 BENCH_moe.json
+#   make bench-serve - ServeEngine continuous-vs-static Poisson load sweep
+#                 (goodput / latency / TTFT) + per-cache-family temp-0
+#                 token-equality vs greedy_generate; writes + validates
+#                 BENCH_serve.json
 #   make trace  - telemetry-instrumented pp=2 x v=2 train run on 4 virtual
 #                 devices; writes telemetry.jsonl + trace.json (Chrome
 #                 about://tracing / Perfetto) and checks the trace's
@@ -24,7 +28,7 @@
 
 PY := python
 
-.PHONY: test lint smoke bench bench-pp bench-comm bench-moe trace
+.PHONY: test lint smoke bench bench-pp bench-comm bench-moe bench-serve trace
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -61,6 +65,12 @@ bench-moe:
 	    --out BENCH_moe.json
 	PYTHONPATH=src $(PY) benchmarks/bench_moe.py \
 	    --validate BENCH_moe.json
+
+bench-serve:
+	PYTHONPATH=src $(PY) benchmarks/bench_serve.py \
+	    --out BENCH_serve.json
+	PYTHONPATH=src $(PY) benchmarks/bench_serve.py \
+	    --validate BENCH_serve.json
 
 trace:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \

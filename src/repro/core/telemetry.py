@@ -62,6 +62,13 @@ _COMPILE_KEYS = frozenset({
 # prefill / decode shapes) but share the schema tag + predicted block
 _DRYRUN_KINDS = frozenset({"train", "prefill", "decode"})
 _DRYRUN_KEYS = frozenset({"schema", "kind", "arch", "status"})
+# per-request serving records (runtime/serve_engine.py emits one per
+# completed request; launch/serve.py --log-jsonl and bench_serve write them)
+_REQUEST_KEYS = frozenset({
+    "schema", "kind", "rid", "arch", "t_arrival", "t_admit",
+    "t_first_token", "t_done", "n_prompt", "n_generated", "finish_reason",
+    "evictions",
+})
 
 
 def sanitize_record(rec: Mapping[str, Any], *,
@@ -374,10 +381,21 @@ def validate_record(rec: Mapping[str, Any]) -> None:
         if rec.get("status") == "ok" and kind == "train" \
                 and "predicted" not in rec:
             raise ValueError("ok train dryrun record missing 'predicted'")
+    elif kind == "request":
+        missing = _REQUEST_KEYS - rec.keys()
     else:
         raise ValueError(f"unknown record kind {kind!r}")
     if missing:
         raise ValueError(f"{kind} record missing keys: {sorted(missing)}")
+    if kind == "request" and not missing:
+        if rec["n_generated"] < 0 or rec["n_prompt"] <= 0:
+            raise ValueError("request record with non-positive token counts")
+        t = [rec["t_arrival"], rec["t_admit"], rec["t_first_token"],
+             rec["t_done"]]
+        if any(x is None for x in t) or not all(
+                a <= b + 1e-9 for a, b in zip(t, t[1:])):
+            raise ValueError(
+                f"request timestamps not monotone: {t}")
     if kind == "step":
         d = rec["drift"]
         for k in ("step_time_ratio", "rolling_ratio", "warn", "threshold"):
@@ -393,9 +411,10 @@ def validate_record(rec: Mapping[str, Any]) -> None:
 
 def validate_jsonl(path: str, *, require_step: bool = True) -> list[dict]:
     """Parse + validate a telemetry JSONL file; returns the records.
-    By default requires at least one step record (a run that never stepped
-    is not a valid telemetry artifact); pass ``require_step=False`` for
-    dryrun streams, which are compile-time only."""
+    By default requires at least one step or request record (a run that
+    never stepped / completed nothing is not a valid telemetry artifact);
+    pass ``require_step=False`` for dryrun streams, which are
+    compile-time only."""
     records = []
     with open(path) as f:
         for i, line in enumerate(f):
@@ -408,6 +427,7 @@ def validate_jsonl(path: str, *, require_step: bool = True) -> list[dict]:
                 raise ValueError(f"{path}:{i + 1}: not JSON: {e}") from e
             validate_record(rec)
             records.append(rec)
-    if require_step and not any(r["kind"] == "step" for r in records):
-        raise ValueError(f"{path}: no step records")
+    if require_step and not any(r["kind"] in ("step", "request")
+                                for r in records):
+        raise ValueError(f"{path}: no step or request records")
     return records

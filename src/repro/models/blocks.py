@@ -94,13 +94,17 @@ def self_attn_decode(
     params: dict,
     x: jax.Array,              # (B, 1, d)
     cache: dict,               # {"k": (B, C, Hkv, hd), "v": ...} — C may be a ring
-    pos: jax.Array,            # scalar int32 — absolute write position
+    pos: jax.Array,            # scalar or (B,) int32 — absolute write position(s)
     cfg: ModelConfig,
 ) -> tuple[jax.Array, dict]:
+    """One-token cached attention.  ``pos`` is a scalar when the whole batch
+    decodes in lockstep (the seed-era path) or a (B,) vector when every slot
+    sits at its own position (continuous batching)."""
     h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps)
     q, k, v = _project_qkv(params, h, h, cfg)
+    batched = pos.ndim == 1
     if cfg.pos == "rope":
-        p = pos[None] if pos.ndim == 0 else pos
+        p = pos[:, None] if batched else pos[None]
         q = layers.apply_rope(q, p, cfg.rope_theta)
         k = layers.apply_rope(k, p, cfg.rope_theta)
     clen = cache["k"].shape[1]
@@ -110,9 +114,14 @@ def self_attn_decode(
         kq, ks = layers.kv_quantize(k)
         vq, vs = layers.kv_quantize(v)
         ck, cv = layers.cache_update(cache["k"], cache["v"], kq, vq, slot)
-        idx3 = (0, slot.astype(jnp.int32), 0)
-        cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks, idx3)
-        cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs, idx3)
+        if batched:
+            b = jnp.arange(x.shape[0])
+            cks = cache["k_scale"].at[b, slot].set(ks[:, 0])
+            cvs = cache["v_scale"].at[b, slot].set(vs[:, 0])
+        else:
+            idx3 = (0, slot.astype(jnp.int32), 0)
+            cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks, idx3)
+            cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs, idx3)
         k_att = layers.kv_dequantize(ck, cks, q.dtype)
         v_att = layers.kv_dequantize(cv, cvs, q.dtype)
         new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
@@ -123,7 +132,10 @@ def self_attn_decode(
     # absolute position held by each ring slot (negative = not yet written);
     # for a full-length cache this reduces to arange masked beyond `pos`.
     slots = jnp.arange(clen)
-    kv_positions = pos - jnp.mod(pos - slots, clen)
+    if batched:
+        kv_positions = pos[:, None] - jnp.mod(pos[:, None] - slots[None, :], clen)
+    else:
+        kv_positions = pos - jnp.mod(pos - slots, clen)
     out = layers.attention(
         q, k_att, v_att,
         causal=True,
@@ -133,6 +145,74 @@ def self_attn_decode(
         kv_positions=kv_positions,
     )
     B = x.shape[0]
+    out = out.reshape(B, 1, -1) @ params["wo"]
+    return x + out, new_cache
+
+
+def paged_attn_decode(
+    params: dict,
+    x: jax.Array,              # (B, 1, d)
+    cache: dict,               # pooled: {"k": (n_blocks, bs, Hkv, hd), "v": ...}
+    block_table: jax.Array,    # (B, max_blocks) int32 — logical -> physical
+    pos: jax.Array,            # (B,) int32 — absolute write position per slot
+    cfg: ModelConfig,
+    active: jax.Array | None = None,   # (B,) — inactive slots write block 0
+) -> tuple[jax.Array, dict]:
+    """One-token attention over a paged KV pool (vLLM-style block tables).
+
+    The pool is shared across decode slots: slot ``b`` owns the physical
+    blocks ``block_table[b, :n_alloc_b]``; logical block ``j`` holds
+    positions ``[j*bs, (j+1)*bs)``.  Rows past a slot's allocation may point
+    anywhere (conventionally block 0, the reserved garbage block) — their
+    logical positions exceed ``pos`` so the causal mask hides them.  The new
+    token's KV is scattered into the pool *before* the gather, so position
+    ``pos`` itself is attended; inactive slots are redirected to block 0 so
+    a retired slot can never corrupt blocks reallocated to a new request.
+    """
+    if cfg.sliding_window is not None:
+        raise ValueError("paged KV pool serves full-attention caches; "
+                         "SWA rings are fixed-size (whole-slot swap)")
+    h = layers.apply_norm(x, params["ln"], cfg.norm, cfg.rms_eps)
+    q, k, v = _project_qkv(params, h, h, cfg)
+    if cfg.pos == "rope":
+        q = layers.apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = layers.apply_rope(k, pos[:, None], cfg.rope_theta)
+    B = x.shape[0]
+    bs = cache["k"].shape[1]
+    b = jnp.arange(B)
+    phys = block_table[b, pos // bs]
+    if active is not None:
+        phys = jnp.where(active, phys, 0)
+    off = jnp.mod(pos, bs)
+    quant = "k_scale" in cache
+    if quant:
+        kq, ks = layers.kv_quantize(k)
+        vq, vs = layers.kv_quantize(v)
+        ck = cache["k"].at[phys, off].set(kq[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[phys, off].set(vq[:, 0].astype(cache["v"].dtype))
+        cks = cache["k_scale"].at[phys, off].set(ks[:, 0])
+        cvs = cache["v_scale"].at[phys, off].set(vs[:, 0])
+        new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+        gk = layers.kv_dequantize(ck[block_table], cks[block_table], q.dtype)
+        gv = layers.kv_dequantize(cv[block_table], cvs[block_table], q.dtype)
+    else:
+        ck = cache["k"].at[phys, off].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[phys, off].set(v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": ck, "v": cv}
+        gk = ck[block_table].astype(q.dtype)
+        gv = cv[block_table].astype(q.dtype)
+    # gathered view: (B, max_blocks, bs, ...) -> (B, max_blocks*bs, ...);
+    # entry j*bs+o sits at logical position j*bs+o by construction
+    skv = block_table.shape[1] * bs
+    gk = gk.reshape(B, skv, *gk.shape[3:])
+    gv = gv.reshape(B, skv, *gv.shape[3:])
+    out = layers.attention(
+        q, gk, gv,
+        causal=True,
+        q_offset=pos,
+        softcap=cfg.attn_logit_softcap,
+        kv_positions=jnp.arange(skv),
+    )
     out = out.reshape(B, 1, -1) @ params["wo"]
     return x + out, new_cache
 

@@ -81,8 +81,8 @@ def _attend_block(
     q: jax.Array,           # (B, Cq, Hkv, G, hd)
     k: jax.Array,           # (B, Skv, Hkv, hd)
     v: jax.Array,           # (B, Skv, Hkv, hd)
-    q_positions: jax.Array, # (Cq,)
-    kv_positions: jax.Array,# (Skv,)
+    q_positions: jax.Array, # (Cq,) or (B, Cq) — per-slot decode positions
+    kv_positions: jax.Array,# (Skv,) or (B, Skv) — per-slot ring timelines
     *,
     causal: bool,
     sliding_window: int | None,
@@ -94,15 +94,19 @@ def _attend_block(
     ) * scale
     if softcap is not None:
         scores = jnp.tanh(scores / softcap) * softcap
+    # positions may carry a leading batch dim (continuous-batching decode:
+    # each slot sits at its own absolute position); normalize to (B'|1, S)
+    qp = q_positions if q_positions.ndim == 2 else q_positions[None]
+    kvp = kv_positions if kv_positions.ndim == 2 else kv_positions[None]
     mask = None
     if causal:
         # kv_positions < 0 marks not-yet-written ring-buffer slots
-        mask = (kv_positions[None, :] <= q_positions[:, None]) & (kv_positions >= 0)[None, :]
+        mask = (kvp[:, None, :] <= qp[:, :, None]) & (kvp[:, None, :] >= 0)
     if sliding_window is not None:
-        win = q_positions[:, None] - kv_positions[None, :] < sliding_window
+        win = qp[:, :, None] - kvp[:, None, :] < sliding_window
         mask = win if mask is None else (mask & win)
     if mask is not None:
-        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        scores = jnp.where(mask[:, None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum(
         "bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
@@ -154,7 +158,11 @@ def attention(
     qg = q.reshape(B, Sq, Hkv, G, hd)
     if kv_positions is None:
         kv_positions = jnp.arange(Skv)
-    q_positions = jnp.arange(Sq) + q_offset
+    if getattr(q_offset, "ndim", 0) == 1:
+        # per-slot offsets (continuous batching): (B,) -> (B, Sq)
+        q_positions = q_offset[:, None] + jnp.arange(Sq)[None, :]
+    else:
+        q_positions = jnp.arange(Sq) + q_offset
 
     block = functools.partial(
         _attend_block,
@@ -164,7 +172,7 @@ def attention(
         scale=scale,
     )
 
-    if Sq <= q_chunk or Sq % q_chunk != 0:
+    if Sq <= q_chunk or Sq % q_chunk != 0 or q_positions.ndim == 2:
         out = block(qg, k, v, q_positions, kv_positions)
     else:
         n_chunks = Sq // q_chunk
@@ -218,7 +226,16 @@ def mlp(x: jax.Array, params: dict, act: str, use_kernel: bool = False) -> jax.A
 
 def cache_update(cache_k: jax.Array, cache_v: jax.Array, k: jax.Array, v: jax.Array,
                  pos: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Write (B, 1, Hkv, hd) new KV at position ``pos`` of (B, S, Hkv, hd)."""
+    """Write (B, 1, Hkv, hd) new KV at position ``pos`` of (B, S, Hkv, hd).
+
+    ``pos`` may be a scalar (whole-batch decode, the training-era path) or a
+    (B,) vector (continuous batching: every slot writes its own position)."""
+    if getattr(pos, "ndim", 0) == 1:
+        b = jnp.arange(cache_k.shape[0])
+        p = pos.astype(jnp.int32)
+        cache_k = cache_k.at[b, p].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[b, p].set(v[:, 0].astype(cache_v.dtype))
+        return cache_k, cache_v
     idx = (0, pos.astype(jnp.int32), 0, 0)
     cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), idx)
     cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), idx)

@@ -413,6 +413,46 @@ class Model:
             return min(cache_len, self.cfg.sliding_window)
         return cache_len
 
+    def paged_cache_specs(self, n_slots: int, n_blocks: int,
+                          block_size: int) -> dict:
+        """Declarative cache tree for the paged/block KV pool (serving):
+        every KV leaf of :meth:`cache_specs` becomes a pool of ``n_blocks``
+        physical blocks of ``block_size`` positions, shared across decode
+        slots via a block table (see ``blocks.paged_attn_decode`` and
+        ``runtime/serve_engine.py``); ``pos`` becomes a per-slot vector.
+
+        Only full-attention KV families page — fixed-size caches (SWA
+        rings, SSD/wkv state) swap whole slots instead."""
+        if not self.paged_cacheable:
+            raise ValueError(
+                f"{self.cfg.family} (sliding_window="
+                f"{self.cfg.sliding_window}) has a fixed-size cache; paged "
+                "pools serve full-attention KV families only")
+        specs = self.cache_specs(1, block_size)
+
+        def repage(s: Spec) -> Spec:
+            # kv leaves are (layers..., 1, block_size, ...): swap the unit
+            # batch dim for the physical-block dim
+            i = s.axes.index("cache_batch")
+            assert s.shape[i] == 1, s
+            return dataclasses.replace(
+                s, shape=s.shape[:i] + (n_blocks,) + s.shape[i + 1:],
+                axes=s.axes[:i] + ("cache_blocks",) + s.axes[i + 1:])
+
+        return {
+            "pos": Spec((n_slots,), ("cache_batch",), init="zeros",
+                        dtype=jnp.int32),
+            "layers": spec_tree_map(repage, specs["layers"]),
+        }
+
+    @property
+    def paged_cacheable(self) -> bool:
+        """True when this family's decode cache is a growing full-attention
+        KV (pageable); False for fixed-size caches (ring KV, SSD/wkv
+        state, hybrid) that the serve engine slot-swaps instead."""
+        return (self.cfg.family in ("dense", "vlm", "moe", "encdec")
+                and self.cfg.sliding_window is None)
+
     def cache_specs(self, batch: int, cache_len: int) -> dict:
         cfg = self.cfg
         hd = cfg.resolved_head_dim
@@ -459,15 +499,32 @@ class Model:
     # ------------------------------------------------------------------
     # Prefill: full-sequence forward that fills the cache
     # ------------------------------------------------------------------
-    def prefill(self, params: dict, batch: dict, cache_len: int) -> tuple[jax.Array, dict]:
-        """Returns (last-token logits (B, V), cache at pos=S)."""
+    def prefill(self, params: dict, batch: dict, cache_len: int,
+                lens: jax.Array | None = None) -> tuple[jax.Array, dict]:
+        """Returns (last-token logits (B, V), cache at pos=S).
+
+        ``lens`` (B,) int32 — per-request true token counts for
+        right-padded prompts (length-bucketed serving prefill): logits are
+        taken at each request's last *real* token, KV/ring placement uses
+        the true length (pad positions never enter the cache — the causal
+        mask already keeps them out of every real token's attention), and
+        ``cache["pos"]`` becomes the per-slot position vector.  Recurrent
+        state (rwkv/hybrid SSD) summarizes the whole padded sequence, so
+        those families must be prefilled at exact length (``lens == S``) —
+        the serve engine does."""
         cfg = self.cfg
         pol = self.compute
         cparams = _cast_floating(params, self.compute_dtype)
         x = self._embed(cparams, batch)
         B, S = x.shape[:2]
         clen = self._attn_cache_len(cache_len)
-        cache: dict[str, Any] = {"pos": jnp.int32(S)}
+        patch_off = cfg.num_patches if cfg.family == "vlm" else 0
+        if lens is None:
+            total = None
+            cache: dict[str, Any] = {"pos": jnp.int32(S)}
+        else:
+            total = lens.astype(jnp.int32) + patch_off   # positions written
+            cache = {"pos": total}
 
         if cfg.family == "moe" and cfg.moe_every > 1:
             def body(carry, lp):
@@ -478,14 +535,14 @@ class Model:
                         dlp["attn"], c, cfg, causal=True,
                         q_chunk=self.q_chunk, return_kv=True, policy=pol)
                     c = blocks.mlp_block(dlp["mlp"], c, cfg, policy=pol)
-                    return c, _kv_into_cache(k, v, clen, cfg.kv_quant)
+                    return c, _kv_into_cache(k, v, clen, cfg.kv_quant, lens=total)
 
                 x, dense_kvs = jax.lax.scan(dense_body, x, lp["dense"])
                 x, k, v = blocks.self_attn_block(lp["attn"], x, cfg, causal=True,
                                                  q_chunk=self.q_chunk,
                                                  return_kv=True, policy=pol)
                 x, a, _ = moe.moe_block(lp["moe"], x, cfg, policy=pol)
-                return (x, aux + a), {"moe_kv": _kv_into_cache(k, v, clen, cfg.kv_quant),
+                return (x, aux + a), {"moe_kv": _kv_into_cache(k, v, clen, cfg.kv_quant, lens=total),
                                       "dense": dense_kvs}
 
             (x, _), kvs = jax.lax.scan(pol.checkpoint(body), (x, jnp.float32(0.0)),
@@ -502,7 +559,7 @@ class Model:
                     aux = aux + a
                 else:
                     x = blocks.mlp_block(lp["mlp"], x, cfg, policy=pol)
-                return (x, aux), _kv_into_cache(k, v, clen, cfg.kv_quant)
+                return (x, aux), _kv_into_cache(k, v, clen, cfg.kv_quant, lens=total)
 
             (x, _), kvs = jax.lax.scan(pol.checkpoint(body), (x, jnp.float32(0.0)),
                                        cparams["layers"])
@@ -518,7 +575,7 @@ class Model:
                 x = blocks.cross_attn_block(lp["cross"], x, memory, cfg,
                                             policy=pol)
                 x = blocks.mlp_block(lp["mlp"], x, cfg, policy=pol)
-                return (x, jnp.float32(0.0)), _kv_into_cache(k, v, clen, cfg.kv_quant)
+                return (x, jnp.float32(0.0)), _kv_into_cache(k, v, clen, cfg.kv_quant, lens=total)
 
             (x, _), kvs = jax.lax.scan(pol.checkpoint(body), (x, jnp.float32(0.0)),
                                        cparams["layers"])
@@ -544,7 +601,7 @@ class Model:
                                                  q_chunk=self.q_chunk,
                                                  return_kv=True, policy=pol)
                 x = blocks.mlp_block(shared["mlp"], x, cfg, policy=pol)
-                return x, (mcs, _kv_into_cache(k, v, clen, cfg.kv_quant))
+                return x, (mcs, _kv_into_cache(k, v, clen, cfg.kv_quant, lens=total))
 
             x, (mcs, kvs) = jax.lax.scan(pol.checkpoint(super_body), x, grouped)
             cache["layers"] = jax.tree.map(
@@ -555,7 +612,8 @@ class Model:
 
         x = layers.apply_norm(x, cparams["final_norm"], cfg.norm, cfg.rms_eps)
         W = self._unembed_matrix(cparams)
-        logits = (x[:, -1, :] @ W).astype(jnp.float32)[..., :cfg.vocab_size]
+        last = x[:, -1, :] if total is None else x[jnp.arange(B), total - 1]
+        logits = (last @ W).astype(jnp.float32)[..., :cfg.vocab_size]
         return logits, cache
 
     # ------------------------------------------------------------------
@@ -564,28 +622,43 @@ class Model:
     def decode_step(self, params: dict, cache: dict, batch: dict) -> tuple[jax.Array, dict]:
         """One serving step: batch = {"token": (B, 1)} (+ "memory" for encdec).
 
+        Serving-engine extensions (all optional, absent = training-era
+        semantics): ``cache["pos"]`` may be a per-slot (B,) vector;
+        ``batch["active"]`` (B,) bool freezes finished/idle slots (their
+        cache state and pos don't advance); ``batch["block_table"]``
+        (B, max_blocks) int32 switches full-attention KV families to the
+        paged pool layout (``paged_cache_specs``), where inactive slots'
+        writes are redirected to the reserved garbage block 0.
+
         Returns (logits (B, V), updated cache)."""
         cfg = self.cfg
         cparams = _cast_floating(params, self.compute_dtype)
         pos = cache["pos"]
+        active = batch.get("active")
+        bt = batch.get("block_table")
         x = jnp.take(cparams["embed"], batch["token"], axis=0)
-        if cfg.family == "vlm":
-            pos_t = pos  # positions already include patch offset from prefill
-        else:
-            pos_t = pos
+        pos_t = pos  # vlm positions already include the patch offset
 
-        new_cache: dict[str, Any] = {"pos": pos + 1}
+        step = jnp.int32(1) if active is None else active.astype(pos.dtype)
+        new_cache: dict[str, Any] = {"pos": pos + step}
+
+        def attn(ap, c, kvc):
+            if bt is not None:
+                return blocks.paged_attn_decode(ap, c, kvc, bt, pos_t, cfg,
+                                                active=active)
+            return blocks.self_attn_decode(ap, c, kvc, pos_t, cfg)
+
         if cfg.family == "moe" and cfg.moe_every > 1:
             def body(x, xs):
                 lp, cl = xs
 
                 def dense_body(c, ys):
                     dlp, dcl = ys
-                    c, nkv = blocks.self_attn_decode(dlp["attn"], c, dcl, pos_t, cfg)
+                    c, nkv = attn(dlp["attn"], c, dcl)
                     return blocks.mlp_block(dlp["mlp"], c, cfg), nkv
 
                 x, ndense = jax.lax.scan(dense_body, x, (lp["dense"], cl["dense"]))
-                x, nkv = blocks.self_attn_decode(lp["attn"], x, cl["moe_kv"], pos_t, cfg)
+                x, nkv = attn(lp["attn"], x, cl["moe_kv"])
                 x, _, _ = moe.moe_block(lp["moe"], x, cfg)
                 return x, {"moe_kv": nkv, "dense": ndense}
             x, ncs = jax.lax.scan(body, x, (cparams["layers"], cache["layers"]))
@@ -593,7 +666,11 @@ class Model:
         elif cfg.family in ("dense", "vlm", "moe"):
             def body(x, xs):
                 lp, cl = xs
-                x, nc = _decode_layer(lp, x, cl, pos_t, cfg, self)
+                x, nc = attn(lp["attn"], x, cl)
+                if cfg.family == "moe":
+                    x, _, _ = moe.moe_block(lp["moe"], x, cfg)
+                else:
+                    x = blocks.mlp_block(lp["mlp"], x, cfg)
                 return x, nc
             x, ncs = jax.lax.scan(body, x, (cparams["layers"], cache["layers"]))
             new_cache["layers"] = ncs
@@ -602,7 +679,7 @@ class Model:
 
             def body(x, xs):
                 lp, cl = xs
-                x, nc = blocks.self_attn_decode(lp["attn"], x, cl, pos_t, cfg)
+                x, nc = attn(lp["attn"], x, cl)
                 x = blocks.cross_attn_block(lp["cross"], x, memory, cfg)
                 x = blocks.mlp_block(lp["mlp"], x, cfg)
                 return x, nc
@@ -642,43 +719,70 @@ class Model:
         else:
             unknown_family(cfg)
 
+        if active is not None and bt is None:
+            # slot-swap mode: a frozen slot's ring/state must not drift
+            # between its finish and the next admission into that slot
+            new_cache["layers"] = _freeze_inactive(
+                new_cache["layers"], cache["layers"], active)
+            if "shared" in new_cache:
+                new_cache["shared"] = _freeze_inactive(
+                    new_cache["shared"], cache["shared"], active)
+
         x = layers.apply_norm(x, cparams["final_norm"], cfg.norm, cfg.rms_eps)
         W = self._unembed_matrix(cparams)
         logits = (x[:, 0, :] @ W).astype(jnp.float32)[..., :cfg.vocab_size]
         return logits, new_cache
 
 
-def _decode_layer(lp: dict, x: jax.Array, cl: dict, pos: jax.Array,
-                  cfg: ModelConfig, model: Model):
-    x, nc = blocks.self_attn_decode(lp["attn"], x, cl, pos, cfg)
-    if cfg.family == "moe":
-        x, _, _ = moe.moe_block(lp["moe"], x, cfg)
-    else:
-        x = blocks.mlp_block(lp["mlp"], x, cfg)
-    return x, nc
+def _freeze_inactive(new: Any, old: Any, active: jax.Array) -> Any:
+    """Keep the old cache state for inactive decode slots.  Stacked cache
+    leaves carry batch on axis 1 (axis 0 is the layer stack)."""
+    def leaf(n, o):
+        keep = active.reshape((1, active.shape[0]) + (1,) * (n.ndim - 2))
+        return jnp.where(keep, n, o)
+    return jax.tree.map(leaf, new, old)
 
 
-def _ring_place(x: jax.Array, clen: int) -> jax.Array:
+def _ring_place(x: jax.Array, clen: int,
+                lens: jax.Array | None = None) -> jax.Array:
     """Place full-sequence entries (B, S, ...) into a length-``clen`` ring,
-    slot(t) = t % clen (matches decode-time writes)."""
+    slot(t) = t % clen (matches decode-time writes).
+
+    With per-request ``lens`` (right-padded prompts), the last real token of
+    request b sits at t = lens[b]-1; slot s then holds timeline position
+    t(s) = (lens-1) - ((lens-1-s) mod clen), dropped when t < 0 (slot not
+    yet reached).  This reduces to slot(t) = t % clen when lens == S, and to
+    plain copy+zero-tail when clen >= S — one formula for both the full
+    cache and the SWA ring."""
     B, S = x.shape[:2]
-    if S == clen:
-        return x
-    if S < clen:
-        pad = [(0, 0), (0, clen - S)] + [(0, 0)] * (x.ndim - 2)
-        return jnp.pad(x, pad)
-    slots = np.arange(S - clen, S) % clen
-    out = jnp.zeros((B, clen, *x.shape[2:]), x.dtype)
-    return out.at[:, slots].set(x[:, S - clen:])
+    if lens is None:
+        if S == clen:
+            return x
+        if S < clen:
+            pad = [(0, 0), (0, clen - S)] + [(0, 0)] * (x.ndim - 2)
+            return jnp.pad(x, pad)
+        slots = np.arange(S - clen, S) % clen
+        out = jnp.zeros((B, clen, *x.shape[2:]), x.dtype)
+        return out.at[:, slots].set(x[:, S - clen:])
+    last = lens.astype(jnp.int32)[:, None] - 1          # (B, 1)
+    slots = jnp.arange(clen)[None, :]                   # (1, clen)
+    t = last - jnp.mod(last - slots, clen)              # (B, clen)
+    valid = t >= 0
+    idx = jnp.clip(t, 0, S - 1).reshape(B, clen, *([1] * (x.ndim - 2)))
+    gathered = jnp.take_along_axis(x, idx, axis=1)
+    keep = valid.reshape(B, clen, *([1] * (x.ndim - 2)))
+    return jnp.where(keep, gathered, jnp.zeros((), x.dtype))
 
 
-def _kv_into_cache(k: jax.Array, v: jax.Array, clen: int, quant: bool = False):
+def _kv_into_cache(k: jax.Array, v: jax.Array, clen: int, quant: bool = False,
+                   lens: jax.Array | None = None):
     if quant:
         kq, ks = layers.kv_quantize(k)
         vq, vs = layers.kv_quantize(v)
-        return {"k": _ring_place(kq, clen), "v": _ring_place(vq, clen),
-                "k_scale": _ring_place(ks, clen), "v_scale": _ring_place(vs, clen)}
-    return {"k": _ring_place(k, clen), "v": _ring_place(v, clen)}
+        return {"k": _ring_place(kq, clen, lens), "v": _ring_place(vq, clen, lens),
+                "k_scale": _ring_place(ks, clen, lens),
+                "v_scale": _ring_place(vs, clen, lens)}
+    return {"k": _ring_place(k, clen, lens), "v": _ring_place(v, clen, lens)}
 
 
 def _cast_floating(tree: Any, dtype: Any, skip: tuple = ()) -> Any:

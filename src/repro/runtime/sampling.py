@@ -1,0 +1,45 @@
+"""Per-request token sampling for the serve engine.
+
+Temperature / nucleus (top-p) sampling with *per-request* deterministic
+keys: request ``r`` at generation step ``s`` always draws from
+``fold_in(PRNGKey(seed_r), s)``, independent of which decode slot it
+occupies or which other requests share the tick — so a request's token
+stream is reproducible across admissions, evictions/replays, and batch
+compositions.  Temperature <= 0 means greedy argmax over the raw logits,
+which is exactly ``serve_loop.greedy_generate``'s rule (the temperature-0
+token-equality contract the tests and bench validator enforce).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _nucleus_one(logits: jax.Array, temp: jax.Array, top_p: jax.Array,
+                 seed: jax.Array, step: jax.Array) -> jax.Array:
+    """One request: (V,) logits -> sampled token id."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temp, 1e-6)
+    order = jnp.argsort(-scaled)
+    ranked = jnp.take(scaled, order)
+    probs = jax.nn.softmax(ranked)
+    # nucleus: keep the smallest prefix with cumulative mass >= top_p
+    # (cum - probs < top_p keeps the head token unconditionally)
+    cum = jnp.cumsum(probs)
+    keep = (cum - probs) < top_p
+    masked = jnp.where(keep, ranked, -jnp.inf)
+    idx = jax.random.categorical(key, masked)
+    return order[idx].astype(jnp.int32)
+
+
+@jax.jit
+def sample_tokens(logits: jax.Array, temps: jax.Array, top_ps: jax.Array,
+                  seeds: jax.Array, steps: jax.Array) -> jax.Array:
+    """Batched sampling: (B, V) logits + per-request (B,) knobs -> (B,) ids.
+
+    ``steps`` is each request's generation index (0 = the token sampled
+    from its prefill logits), the fold_in counter that makes streams
+    deterministic."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    sampled = jax.vmap(_nucleus_one)(logits, temps, top_ps, seeds, steps)
+    return jnp.where(temps <= 0.0, greedy, sampled)

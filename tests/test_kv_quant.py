@@ -33,3 +33,47 @@ def test_kv_quant_decode_close(name):
                                    rtol=0.08, atol=0.15)
     # greedy decisions identical on this scale
     assert (jnp.argmax(lq, -1) == jnp.argmax(lr, -1)).all()
+
+
+KV_QUANT_MESH_CODE = '''
+import dataclasses
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.launch.mesh import mesh_for_plan
+from repro.models.model import Model
+from repro.runtime import serve_loop
+from repro.runtime.train_loop import ParallelPlan
+
+plan = ParallelPlan(dp=2, precision="fp32", zero=0)
+mesh = mesh_for_plan(plan)
+for arch in ("yi-6b", "h2o-danube-1.8b"):   # full cache + SWA ring
+    cfg = dataclasses.replace(get_config(arch).reduced(), kv_quant=True)
+    m = Model(cfg, jnp.float32)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S, CL = 2, 16, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 4), 0,
+                              cfg.vocab_size)
+    _, cache_m = m.prefill(params, {"tokens": toks[:, :S]}, CL)
+    _, cache_r = m.prefill(params, {"tokens": toks[:, :S]}, CL)
+    assert cache_m["layers"]["k"].dtype == jnp.int8
+    step_m = serve_loop.build_decode_step(m, mesh, plan, B, CL)
+    step_r = jax.jit(m.decode_step)
+    _, csh = serve_loop.cache_sds_and_shardings(m, B, CL, mesh, plan)
+    cache_m = jax.device_put(cache_m, csh)
+    for t in range(S, S + 4):
+        db = {"token": toks[:, t:t + 1]}
+        lg_m, cache_m = step_m(params, cache_m, db)
+        lg_r, cache_r = step_r(params, cache_r, db)
+    assert cache_m["layers"]["k"].dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(lg_m), np.asarray(lg_r),
+                               rtol=1e-5, atol=1e-5)
+print("KV_QUANT_MESH_OK")
+'''
+
+
+def test_kv_quant_decode_under_dp2_mesh(multidev):
+    """int8 KV caches (values + scales) shard, donate, and decode through
+    serve_loop.build_decode_step on a real dp=2 mesh, matching the
+    in-process quantized decode path."""
+    out = multidev(KV_QUANT_MESH_CODE, n_devices=2)
+    assert "KV_QUANT_MESH_OK" in out

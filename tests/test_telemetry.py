@@ -330,9 +330,17 @@ def test_validate_jsonl_requires_steps(tmp_path):
     p.write_text(json.dumps({
         "schema": tel.SCHEMA, "kind": "train", "arch": "x",
         "status": "error"}) + "\n")
-    with pytest.raises(ValueError, match="no step records"):
+    with pytest.raises(ValueError, match="no step or request records"):
         tel.validate_jsonl(str(p))
     assert len(tel.validate_jsonl(str(p), require_step=False)) == 1
+    # a serve stream (request records only) is a valid artifact
+    q = tmp_path / "serve.jsonl"
+    q.write_text(json.dumps({
+        "schema": tel.SCHEMA, "kind": "request", "rid": 0, "arch": "x",
+        "t_arrival": 0.0, "t_admit": 0.1, "t_first_token": 0.2,
+        "t_done": 0.3, "n_prompt": 4, "n_generated": 2,
+        "finish_reason": "max_new_tokens", "evictions": 0}) + "\n")
+    assert len(tel.validate_jsonl(str(q))) == 1
 
 
 # ---------------------------------------------------------------------------
